@@ -1,0 +1,43 @@
+"""Table 1 (communication): size O(s_a·K + s_e·M_p) and trips O(K) for
+Parrot vs O(s_a·M_p), O(M_p) for flat SD/FA-Dist — measured from the
+Communicator's byte/trip accounting, plus the compression multipliers."""
+from benchmarks.common import build_server, emit, mlp_params
+from repro.core.aggregation import payload_bytes
+from repro.core.compression import make_compressor
+
+
+def _one_round(srv):
+    m = srv.run_round()
+    return m.comm_bytes, m.comm_trips
+
+
+def run() -> None:
+    s_a = payload_bytes(mlp_params())
+    K, M_p = 8, 100
+
+    srv = build_server(K=K, clients_per_round=M_p, n_clients=300)
+    bytes_h, trips_h = _one_round(srv)
+    emit("table1_comm/parrot_hierarchical", bytes_h / 1e3,
+         f"trips={trips_h};expected_trips=2K={2 * K}")
+
+    # flat emulation: every client result shipped individually
+    flat_bytes = s_a * M_p + s_a * K   # results + broadcast
+    emit("table1_comm/flat_SD_dist_analytic", flat_bytes / 1e3,
+         f"trips={2 * M_p};ratio_vs_parrot="
+         f"{flat_bytes / max(bytes_h, 1):.2f}x")
+
+    # Mime has a COLLECT (Special Param) -> O(s_e * M_p) irreducible
+    srv_m = build_server(K=K, clients_per_round=M_p, n_clients=300,
+                         algorithm="mime")
+    bytes_m, trips_m = _one_round(srv_m)
+    emit("table1_comm/mime_special_params", bytes_m / 1e3,
+         f"trips={trips_m};grows_with_Mp=True")
+
+    # compression on the reducible part (top-k EF / int8)
+    for kind in ("topk", "int8"):
+        srv_c = build_server(K=K, clients_per_round=M_p, n_clients=300,
+                             compressor=make_compressor(kind, 0.01))
+        bytes_c, trips_c = _one_round(srv_c)
+        emit(f"table1_comm/parrot+{kind}", bytes_c / 1e3,
+             f"trips={trips_c};ratio_vs_uncompressed="
+             f"{bytes_h / max(bytes_c, 1):.2f}x")

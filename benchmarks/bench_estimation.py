@@ -1,0 +1,48 @@
+"""Figures 6 / 11: workload-model estimation accuracy; Time-Window vs
+all-history under a dynamic (cosine-drift) environment."""
+import numpy as np
+
+from benchmarks.common import build_server, emit
+from repro.core.executor import dynamic_env, hetero_gpus
+
+ROUNDS = 12
+
+
+def _mean_err(server, rounds):
+    errs = []
+    for _ in range(rounds):
+        m = server.run_round()
+        if np.isfinite(m.estimation_error):
+            errs.append(m.estimation_error)
+    return float(np.mean(errs[2:])) if len(errs) > 2 else float("nan")
+
+
+def run() -> None:
+    # Fig 6: static heterogeneous devices -> the linear model fits well
+    hete = hetero_gpus({k: [0.0, 0.5, 1.0, 3.0][k % 4] for k in range(8)})
+    srv = build_server(scheduler="parrot", speed_model=hete)
+    err = _mean_err(srv, ROUNDS)
+    emit("fig6_estimation_error/hete_static", err * 1e6,
+         f"mean_rel_err={err:.3f}")
+
+    # Fig 11: dynamic environment — all-history vs time-window
+    dyn = dynamic_env(8, ROUNDS)
+    srv_all = build_server(scheduler="parrot", speed_model=dyn, time_window=0)
+    srv_win = build_server(scheduler="parrot", speed_model=dyn, time_window=2)
+    err_all = _mean_err(srv_all, ROUNDS)
+    err_win = _mean_err(srv_win, ROUNDS)
+    emit("fig11a_est_error/all_history", err_all * 1e6, f"{err_all:.3f}")
+    emit("fig11a_est_error/time_window", err_win * 1e6, f"{err_win:.3f}")
+
+    from benchmarks.common import mean_makespan
+    ms_all = mean_makespan(
+        build_server(scheduler="parrot", speed_model=dyn, time_window=0),
+        ROUNDS)
+    ms_win = mean_makespan(
+        build_server(scheduler="parrot", speed_model=dyn, time_window=2),
+        ROUNDS)
+    ms_none = mean_makespan(
+        build_server(scheduler="none", speed_model=dyn), ROUNDS)
+    emit("fig11b_round_time/all_history", ms_all * 1e6, f"{ms_all:.4f}s")
+    emit("fig11b_round_time/time_window", ms_win * 1e6, f"{ms_win:.4f}s")
+    emit("fig11b_round_time/unscheduled", ms_none * 1e6, f"{ms_none:.4f}s")

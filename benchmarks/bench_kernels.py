@@ -1,0 +1,46 @@
+"""Microbenchmarks of the Pallas kernel wrappers (interpret mode on CPU —
+timing here validates plumbing, not TPU performance; the TPU-side roofline
+for these kernels is in §Roofline)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+
+    n = 1 << 20
+    acc = jnp.zeros((n,), jnp.float32)
+    deltas = jax.random.normal(key, (4, n), jnp.bfloat16)
+    w = jnp.ones((4,))
+    us = _time(lambda: ops.agg_weighted_sum(acc, deltas, w))
+    emit("kernel_agg_weighted_sum/1M_x4", us,
+         f"GBps={(n * 4 * 2 + n * 8) / us / 1e3:.2f}")
+
+    q = jax.random.normal(key, (1, 512, 4, 64), jnp.bfloat16)
+    us = _time(lambda: ops.flash_attention(q, q, q, causal=True))
+    emit("kernel_flash_attention/512x4x64", us, "interpret=True")
+
+    x = jax.random.normal(key, (4096, 1024), jnp.bfloat16)
+    g = jnp.ones((1024,), jnp.bfloat16)
+    us = _time(lambda: ops.rmsnorm(x, g))
+    emit("kernel_rmsnorm/4096x1024", us, "interpret=True")
+
+    qs = jax.random.normal(key, (4, 512, 16))
+    vs = jax.random.normal(key, (4, 512, 32))
+    la = -jax.nn.softplus(jax.random.normal(key, (4, 512)))
+    us = _time(lambda: ops.ssm_scan(qs, qs, vs, la, chunk=128))
+    emit("kernel_ssm_scan/512x16x32", us, "interpret=True")

@@ -1,0 +1,28 @@
+"""Figures 7 / 8: scaling with the number of executors K — round time
+(near-linear speedup) and scheduling/estimation overhead (linear in K,
+negligible vs the round)."""
+import numpy as np
+
+from benchmarks.common import build_server, emit
+
+ROUNDS = 6
+
+
+def run() -> None:
+    times = {}
+    for K in (2, 4, 8, 16, 32):
+        srv = build_server(K=K, clients_per_round=64, n_clients=256,
+                           scheduler="parrot")
+        ms, sched, est = [], [], []
+        for _ in range(ROUNDS):
+            m = srv.run_round()
+            ms.append(m.makespan)
+            sched.append(m.schedule_time)
+            est.append(m.estimate_time)
+        times[K] = float(np.mean(ms[2:]))
+        emit(f"fig7_round_time/K={K}", times[K] * 1e6,
+             f"speedup_vs_K2={times[2] / max(times[K], 1e-12):.2f}x")
+        emit(f"fig8_sched_overhead/K={K}",
+             float(np.mean(sched[2:])) * 1e6,
+             f"est_us={float(np.mean(est[2:])) * 1e6:.1f};"
+             f"frac_of_round={float(np.mean(sched[2:])) / max(times[K], 1e-12):.5f}")

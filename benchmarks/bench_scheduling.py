@@ -1,0 +1,43 @@
+"""Figures 5 / 9 / 10: per-round time under different schedulers, hardware
+heterogeneity profiles and concurrency scales.
+
+The paper's comparison axes mapped to this harness:
+  - scheduled (Parrot, Alg. 3) vs unscheduled (FA-Dist arrival order) vs
+    uniform split — same workload, same executors;
+  - Homog. / Hete. GPU (fixed η_k, paper Appendix A) / real skew;
+  - M_p ∈ {20, 100} concurrent clients (Fig. 10).
+Round time is the BSP makespan max_k Σ T̂_{m,k} in simulated seconds.
+"""
+from benchmarks.common import build_server, emit, mean_makespan
+from repro.core.executor import hetero_gpus, homogeneous
+
+ROUNDS = 8
+HETE = hetero_gpus({0: 0.0, 1: 0.5, 2: 1.0, 3: 3.0,
+                    4: 0.0, 5: 0.5, 6: 1.0, 7: 3.0})
+
+
+def run() -> None:
+    for env_name, speed in [("homog", homogeneous), ("hete", HETE)]:
+        base = {}
+        for policy in ("parrot", "uniform", "none"):
+            srv = build_server(scheduler=policy, speed_model=speed,
+                               partition="quantity_skew")
+            ms = mean_makespan(srv, ROUNDS)
+            base[policy] = ms
+            emit(f"fig5_round_time/{env_name}/{policy}", ms * 1e6,
+                 f"makespan_s={ms:.4f}")
+        emit(f"fig9_speedup_vs_unsched/{env_name}",
+             base["parrot"] * 1e6,
+             f"x{base['none'] / max(base['parrot'], 1e-12):.2f}_faster")
+
+    for mp in (20, 100):
+        srv_s = build_server(clients_per_round=mp, n_clients=max(200, mp * 2),
+                             scheduler="parrot", speed_model=HETE,
+                             partition="quantity_skew")
+        srv_n = build_server(clients_per_round=mp, n_clients=max(200, mp * 2),
+                             scheduler="none", speed_model=HETE,
+                             partition="quantity_skew")
+        ms_s = mean_makespan(srv_s, ROUNDS)
+        ms_n = mean_makespan(srv_n, ROUNDS)
+        emit(f"fig10_concurrency/Mp={mp}", ms_s * 1e6,
+             f"sched={ms_s:.4f}s_unsched={ms_n:.4f}s")

@@ -1,0 +1,77 @@
+"""Shared benchmark plumbing: the standard FL workload (paper §5.1 scaled to
+this container), timing helpers, and CSV emission."""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (ClientStateManager, ParrotServer, SequentialExecutor,
+                        make_algorithm)
+from repro.core.executor import SpeedModel, dynamic_env, hetero_gpus, homogeneous
+from repro.data import make_classification_clients
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _loss_fn(params, batch):
+    x = batch["x"]
+    h = jax.nn.relu(x @ params["w0"] + params["b0"])
+    logits = h @ params["w1"] + params["b1"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+GRAD_FN = jax.jit(jax.value_and_grad(_loss_fn))
+
+
+def mlp_params(dim=32, hidden=64, classes=10, seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {
+        "w0": jax.random.normal(k1, (dim, hidden)) / np.sqrt(dim),
+        "b0": jnp.zeros((hidden,)),
+        "w1": jax.random.normal(k2, (hidden, classes)) / np.sqrt(hidden),
+        "b1": jnp.zeros((classes,)),
+    }
+
+
+def build_server(*, n_clients=200, clients_per_round=40, K=8,
+                 algorithm="fedavg", scheduler="parrot", time_window=0,
+                 speed_model: SpeedModel = homogeneous, partition="natural",
+                 partition_arg=5.0, compressor=None, seed=0, local_epochs=1,
+                 warmup_rounds=1) -> ParrotServer:
+    data = make_classification_clients(
+        n_clients, dim=32, n_classes=10, partition=partition,
+        partition_arg=partition_arg, mean_samples=60, batch_size=20,
+        seed=seed)
+    algo = make_algorithm(algorithm, GRAD_FN, 0.05, local_epochs=local_epochs)
+    sm = ClientStateManager(tempfile.mkdtemp(prefix="bench_state_"))
+    execs = [SequentialExecutor(k, algo, state_manager=sm,
+                                speed_model=speed_model) for k in range(K)]
+    return ParrotServer(params=mlp_params(), algorithm=algo, executors=execs,
+                        data_by_client=data,
+                        clients_per_round=clients_per_round,
+                        scheduler_policy=scheduler, time_window=time_window,
+                        warmup_rounds=warmup_rounds, compressor=compressor,
+                        seed=seed)
+
+
+def mean_makespan(server: ParrotServer, rounds: int, skip: int = 2) -> float:
+    ms = [server.run_round().makespan for _ in range(rounds)]
+    return float(np.mean(ms[skip:]))

@@ -1,0 +1,208 @@
+"""§Roofline: derive the three roofline terms per (arch × shape × mesh) cell
+from the dry-run artifacts (results/dryrun/*.json).
+
+  compute     = HLO_FLOPs_per_dev / peak_FLOPs            (197 TFLOP/s bf16)
+  memory      = HLO_bytes_per_dev / HBM_bw                (819 GB/s)
+  collective  = collective_bytes_per_dev / link_bw        (~50 GB/s/link)
+
+FLOPs/bytes are the trip-count-aware parse of the post-SPMD HLO
+(launch/hlo_analysis.py); collective bytes use ring-algorithm factors.  The
+bytes term is an upper-ish estimate: the CPU partitioner materialises f32
+dot outputs and layout copies a TPU would fuse, so we also report a fused
+estimate (bytes_fused ≈ bytes × F32_FUSE_DISCOUNT) and classify the
+bottleneck on the fused number.  MFU proxy = model-FLOPs time / dominant
+term.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+F32_FUSE_DISCOUNT = 0.5    # CPU HLO f32-materialisation vs TPU fusion
+
+DRYRUN_DIR = os.path.join("results", "dryrun")
+OUT_MD = os.path.join("results", "roofline.md")
+
+
+def _attn_flops(cfg, B, S, ctx=None) -> float:
+    """Causal attention matmul FLOPs (qk + pv), forward, whole model."""
+    if cfg.family == "ssm":
+        return 0.0
+    ctx = ctx if ctx is not None else S
+    if cfg.sliding_window:
+        ctx = min(ctx, cfg.sliding_window)
+    per_tok = 2.0 * 2.0 * cfg.n_heads * cfg.hd * ctx
+    causal = 0.5 if (S > 1 and not cfg.sliding_window) else 1.0
+    return per_tok * B * S * causal * cfg.n_layers
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """Useful FLOPs: 6·N_active·D + 3·attn for train; 2·N·D + attn for
+    prefill; 2·N·B + attn(ctx) for decode."""
+    from repro.configs.base import shape_by_name
+    from repro.configs.registry import get_arch
+    cfg = get_arch(rec["arch"])
+    n_active = rec.get("model", {}).get("n_active_params",
+                                        cfg.n_active_params())
+    s = shape_by_name(rec["shape"])
+    n_dev = rec["n_devices"]
+    B, S = s.global_batch, s.seq_len
+    if s.kind == "train":
+        return (6.0 * n_active * B * S + 3.0 * _attn_flops(cfg, B, S)) / n_dev
+    if s.kind == "prefill":
+        return (2.0 * n_active * B * S + _attn_flops(cfg, B, S)) / n_dev
+    # decode: one new token attending over the S-long cache
+    return (2.0 * n_active * B + _attn_flops(cfg, B, 1, ctx=S)) / n_dev
+
+
+def min_memory_bytes_per_device(rec: dict) -> float:
+    """HBM-traffic floor: weights streamed once per pass (train: fwd + bwd
+    reads + grad write + update rw ≈ 5×), plus the KV-cache/state read for
+    decode, plus remat-boundary activation traffic for train."""
+    from repro.configs.base import shape_by_name
+    from repro.configs.registry import get_arch
+    cfg = get_arch(rec["arch"])
+    s = shape_by_name(rec["shape"])
+    n_dev = rec["n_devices"]
+    p_local = 2.0 * cfg.n_params() / n_dev            # bf16
+    B, S = s.global_batch, s.seq_len
+    act = 2.0 * B * S * cfg.d_model * cfg.n_layers / n_dev
+    if s.kind == "train":
+        micro = max(cfg.train_microbatches, 1)
+        return 5.0 * p_local * micro + 4.0 * act
+    if s.kind == "prefill":
+        return p_local + 3.0 * act
+    # decode: weights + cache (k and v) read once, one slot written
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    cache = 2.0 * 2.0 * B * ctx * cfg.n_kv_heads * cfg.hd         * cfg.n_layers / n_dev
+    return p_local + cache
+
+
+def analyze_cell(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    flops = rec["flops_per_device"]
+    bytes_ = rec["bytes_per_device"]
+    coll = rec["collectives"]["total_bytes_per_device"]
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_m_fused = bytes_ * F32_FUSE_DISCOUNT / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m_fused, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    mb = min_memory_bytes_per_device(rec)
+    # best achievable step = the binding USEFUL roofline (compute or memory)
+    t_best = max(mf / PEAK_FLOPS, mb / HBM_BW)
+    step = max(terms.values())
+    return {
+        "cell": rec["cell"],
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "multipod" if rec.get("multi_pod") else "pod",
+        "compute_s": t_c,
+        "memory_s": t_m_fused,
+        "memory_raw_s": t_m,
+        "collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": t_best / step if step else 0.0,
+        "step_s": step,
+        "mem_temp_gb": rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+RECOMMEND = {
+    "compute": ("compute-bound: raise MFU via larger per-chip tiles / fewer "
+                "remat recomputes / MoE dispatch-FLOP reduction"),
+    "memory": ("memory-bound: fuse attention/norms (Pallas kernels), keep "
+               "activations bf16, shrink logits chunks"),
+    "collective": ("collective-bound: re-shard to cut all-gather/all-reduce "
+                   "volume (head-TP vs seq-TP, vocab-parallel head, EP for "
+                   "MoE), overlap collectives with compute"),
+}
+
+
+def load_all(dryrun_dir: str = DRYRUN_DIR) -> List[dict]:
+    rows = []
+    if not os.path.isdir(dryrun_dir):
+        return rows
+    for fn in sorted(os.listdir(dryrun_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(dryrun_dir, fn)) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            rows.append({"cell": rec["cell"], "skipped": rec["reason"]})
+            continue
+        if rec.get("status") == "error":
+            rows.append({"cell": rec["cell"],
+                         "error": rec.get("error", "?")[:120]})
+            continue
+        out = analyze_cell(rec)
+        if out:
+            rows.append(out)
+    return rows
+
+
+def write_markdown(rows: List[dict], path: str = OUT_MD) -> str:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    lines = [
+        "# Roofline table (single-pod 16x16 unless noted)",
+        "",
+        "| cell | compute s | memory s | collective s | dominant | useful "
+        "FLOPs | roofline frac | temp GB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['cell']} | — | — | — | skipped | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['cell']} | — | — | — | ERROR | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | **{r['dominant']}** | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['mem_temp_gb']:.1f} |")
+    lines.append("")
+    lines.append("Per-cell next move (rule-based from the dominant term):")
+    for r in rows:
+        if "dominant" in r:
+            lines.append(f"- `{r['cell']}`: {RECOMMEND[r['dominant']]}")
+    text = "\n".join(lines)
+    with open(path, "w") as f:
+        f.write(text + "\n")
+    return text
+
+
+def run() -> None:
+    from benchmarks.common import emit
+    rows = load_all()
+    if not rows:
+        emit("roofline/no_dryrun_artifacts", 0.0,
+             "run python -m repro.launch.dryrun --all first")
+        return
+    write_markdown(rows)
+    ok = [r for r in rows if "dominant" in r]
+    for r in ok:
+        emit(f"roofline/{r['cell']}", r["step_s"] * 1e6,
+             f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+             f"useful={r['useful_flops_ratio']:.2f}")
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        emit("roofline/worst_fraction", worst["step_s"] * 1e6,
+             f"{worst['cell']}={worst['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

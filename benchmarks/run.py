@@ -1,0 +1,34 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+
+  bench_scheduling  — Figs. 5, 9, 10 (round time: scheduled vs not, hetero)
+  bench_estimation  — Figs. 6, 11 (workload-model error; time-window)
+  bench_scaling     — Figs. 7, 8 (speedup in K; scheduling overhead)
+  bench_memory      — Tables 1, 3 (memory per scheme; state manager)
+  bench_comm        — Table 1 (comm size/trips; hierarchical vs flat)
+  bench_algorithms  — Fig. 4 (six algorithms: exactness + round times)
+  bench_kernels     — Pallas wrapper micro-timings (plumbing check)
+  roofline          — §Roofline terms from the dry-run artifacts
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    import importlib
+    mods = ["bench_scheduling", "bench_estimation", "bench_scaling",
+            "bench_memory", "bench_comm", "bench_algorithms",
+            "bench_kernels", "roofline"]
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    for m in mods:
+        if only and m not in only:
+            continue
+        mod = importlib.import_module(f"benchmarks.{m}")
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

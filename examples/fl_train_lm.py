@@ -1,0 +1,60 @@
+"""End-to-end driver: federated training of a reduced LM (~the '100M-class'
+end-to-end requirement scaled to this CPU container) for a few hundred
+client steps across rounds, with any registry architecture as the client
+model.
+
+  PYTHONPATH=src python examples/fl_train_lm.py --arch qwen2-0.5b --rounds 8
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--algorithm", default="fedavg")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_arch
+    from repro.core import (ClientStateManager, ParrotServer,
+                            SequentialExecutor, make_algorithm)
+    from repro.data import make_lm_clients
+    from repro.models import lm
+
+    cfg = get_arch(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+
+    def loss_fn(p, batch):
+        return lm.loss_and_aux(p, batch, cfg)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    data = make_lm_clients(60, vocab=cfg.vocab_size, seq_len=32,
+                           batch_size=4, mean_samples=8, seed=0)
+    algo = make_algorithm(args.algorithm, grad_fn, lr=0.1, local_epochs=1)
+    sm = ClientStateManager(tempfile.mkdtemp())
+    execs = [SequentialExecutor(k, algo, state_manager=sm) for k in range(4)]
+    server = ParrotServer(params=params, algorithm=algo, executors=execs,
+                          data_by_client=data, clients_per_round=12, seed=0)
+
+    eval_batch = {
+        "inputs": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+    }
+    for _ in range(args.rounds):
+        m = server.run_round()
+        loss = float(lm.loss_and_aux(server.params, eval_batch, cfg))
+        print(f"round {m.round}: clients={m.n_clients} "
+              f"makespan={m.makespan:.2f}s eval_loss={loss:.4f}")
+    print("done — federated LM training via Parrot on", cfg.name)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: simulate 100 federated clients on 4 executors with Parrot.
+
+Demonstrates the core loop in ~40 lines: define a model + grad_fn, pick an
+FL algorithm, build executors, run rounds.  Hierarchical aggregation,
+scheduling and state management are on by default.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ClientStateManager, ParrotServer, SequentialExecutor,
+                        make_algorithm)
+from repro.data import make_classification_clients
+
+
+# 1. A model is just params + a grad function.
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+params = {"w": jnp.zeros((32, 10)), "b": jnp.zeros((10,))}
+
+# 2. A federated dataset: 100 clients, naturally heterogeneous sizes.
+data = make_classification_clients(100, dim=32, n_classes=10,
+                                   partition="natural", seed=0)
+
+# 3. Pick an algorithm (stateful SCAFFOLD works the same as FedAvg here —
+#    the state manager handles the control variates transparently).
+algo = make_algorithm("fedavg", grad_fn, lr=0.05, local_epochs=2)
+
+# 4. Executors = the "devices" of the paper; K=4 simulates all 100 clients.
+sm = ClientStateManager(tempfile.mkdtemp())
+executors = [SequentialExecutor(k, algo, state_manager=sm) for k in range(4)]
+
+server = ParrotServer(params=params, algorithm=algo, executors=executors,
+                      data_by_client=data, clients_per_round=20, seed=0)
+
+for r in range(10):
+    m = server.run_round()
+    print(f"round {m.round}: makespan={m.makespan:.3f}s "
+          f"comm={m.comm_bytes / 1e3:.1f}KB trips={m.comm_trips}")
+
+print("final |w|:", float(jnp.linalg.norm(server.params["w"])))

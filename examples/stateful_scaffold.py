@@ -1,0 +1,75 @@
+"""Stateful FL at scale: SCAFFOLD over 1000 clients with a memory-bounded
+client state manager (paper §3.4), fault injection, checkpoint + resume.
+
+Shows:
+  - control variates held by the tiered state store (watch the spill stats)
+  - an executor failing mid-round and the system recovering (elastic K)
+  - checkpoint/restart producing the identical model
+
+  PYTHONPATH=src python examples/stateful_scaffold.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore_latest
+from repro.core import (ClientStateManager, ParrotServer, SequentialExecutor,
+                        make_algorithm)
+from repro.data import make_classification_clients
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+params = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((8,))}
+
+work = tempfile.mkdtemp(prefix="parrot_scaffold_")
+data = make_classification_clients(1000, dim=16, n_classes=8,
+                                   mean_samples=30, seed=0)
+algo = make_algorithm("scaffold", grad_fn, lr=0.1)
+
+# state budget ~ K states: everything else spills to disk (O(s_d K) memory)
+sm = ClientStateManager(os.path.join(work, "state"),
+                        memory_budget_bytes=8 * 2048)
+executors = [SequentialExecutor(k, algo, state_manager=sm) for k in range(8)]
+executors[5].fail_at = (3, 2)      # executor 5 dies in round 3
+
+server = ParrotServer(
+    params=params, algorithm=algo, executors=executors, data_by_client=data,
+    clients_per_round=50,
+    checkpoint_manager=CheckpointManager(os.path.join(work, "ckpt"),
+                                         every_rounds=2),
+    seed=0)
+
+for _ in range(6):
+    m = server.run_round()
+    print(f"round {m.round}: K={m.n_executors} failures={m.failures} "
+          f"state_mem={sm.memory_bytes / 1e3:.0f}KB "
+          f"state_disk={sm.disk_bytes() / 1e6:.1f}MB "
+          f"spills={sm.stats['spills']}")
+
+print("\nsimulating a crash + restart ...")
+algo2 = make_algorithm("scaffold", grad_fn, lr=0.1)
+sm2 = ClientStateManager(os.path.join(work, "state2"),
+                         memory_budget_bytes=8 * 2048)
+execs2 = [SequentialExecutor(k, algo2, state_manager=sm2) for k in range(7)]
+server2 = ParrotServer(params=params, algorithm=algo2, executors=execs2,
+                       data_by_client=data, clients_per_round=50, seed=0)
+restored = restore_latest(server2, os.path.join(work, "ckpt"))
+print(f"restored at round {restored}; continuing 2 more rounds")
+for _ in range(2):
+    m = server2.run_round()
+    print(f"round {m.round}: K={m.n_executors}")
+print("diff vs pre-crash params:",
+      float(jnp.max(jnp.abs(server2.params["w"] - server.params["w"]))))

@@ -1,0 +1,138 @@
+"""Round-granular atomic checkpointing (fault tolerance; DESIGN.md §7).
+
+Layout:
+  <dir>/step_<round>/
+      server.pkl          — params, server optimizer/algorithm state, RNG,
+                            estimator history, round counter
+      state/              — client-state shard files (hard-linked from the
+                            state managers; incremental)
+      MANIFEST.json       — written LAST; a checkpoint without a manifest is
+                            treated as torn and ignored on restore
+  <dir>/LATEST            — text file naming the newest complete step
+
+Writes go to a temp dir then ``os.replace`` into place, so a crash mid-save
+never corrupts the previous checkpoint.  ``restore_latest`` walks backwards
+past torn checkpoints.  ``keep`` bounds retained checkpoints (GC).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, every_rounds: int = 1, keep: int = 3):
+        self.directory = directory
+        self.every_rounds = every_rounds
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, rnd: int) -> str:
+        return os.path.join(self.directory, f"step_{rnd:08d}")
+
+    def save(self, server: Any) -> str:
+        rnd = server.round
+        final = self._step_dir(rnd)
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_ckpt_")
+        try:
+            blob = {
+                "round": rnd,
+                "params": jax.tree.map(np.asarray, server.params),
+                "server_state": jax.tree.map(np.asarray, server.server_state),
+                "rng_state": server.rng.bit_generator.state,
+                "estimator_records": {
+                    k: list(v) for k, v in server.estimator._records.items()},
+                "history": server.history,
+                "executor_ids": sorted(server.executors),
+                "time": time.time(),
+            }
+            with open(os.path.join(tmp, "server.pkl"), "wb") as f:
+                pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
+            # client-state shards (stateful algorithms)
+            state_dir = os.path.join(tmp, "state")
+            for ex in server.executors.values():
+                if ex.state_manager is not None:
+                    ex.state_manager.checkpoint(state_dir)
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump({"round": rnd, "complete": True}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        with open(os.path.join(self.directory, "LATEST.tmp"), "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(os.path.join(self.directory, "LATEST.tmp"),
+                   os.path.join(self.directory, "LATEST"))
+        self._gc()
+        return final
+
+    def maybe_save(self, server: Any) -> Optional[str]:
+        if server.round % self.every_rounds == 0:
+            return self.save(server)
+        return None
+
+    def _gc(self) -> None:
+        steps = sorted(d for d in os.listdir(self.directory)
+                       if d.startswith("step_"))
+        for d in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, server: Any, step_dir: str) -> int:
+        with open(os.path.join(step_dir, "server.pkl"), "rb") as f:
+            blob = pickle.load(f)
+        server.params = jax.tree.map(jax.numpy.asarray, blob["params"])
+        server.server_state = jax.tree.map(jax.numpy.asarray,
+                                           blob["server_state"])
+        server.rng.bit_generator.state = blob["rng_state"]
+        server.estimator._records.clear()
+        for k, v in blob["estimator_records"].items():
+            server.estimator._records[int(k)] = list(v)
+        server.history = list(blob["history"])
+        server.round = blob["round"]
+        state_dir = os.path.join(step_dir, "state")
+        if os.path.isdir(state_dir):
+            for ex in server.executors.values():
+                if ex.state_manager is not None:
+                    ex.state_manager.restore(state_dir)
+        return server.round
+
+
+def restore_latest(server: Any, directory: str) -> Optional[int]:
+    """Restore the newest complete checkpoint; walks past torn ones."""
+    mgr = CheckpointManager(directory)
+    latest = os.path.join(directory, "LATEST")
+    candidates: List[str] = []
+    if os.path.exists(latest):
+        with open(latest) as f:
+            candidates.append(os.path.join(directory, f.read().strip()))
+    candidates.extend(sorted(
+        (os.path.join(directory, d) for d in os.listdir(directory)
+         if d.startswith("step_")), reverse=True))
+    seen = set()
+    for cand in candidates:
+        if cand in seen or not os.path.isdir(cand):
+            continue
+        seen.add(cand)
+        manifest = os.path.join(cand, "MANIFEST.json")
+        if not os.path.exists(manifest):
+            continue  # torn checkpoint
+        try:
+            with open(manifest) as f:
+                if not json.load(f).get("complete"):
+                    continue
+            return mgr.restore(server, cand)
+        except Exception:
+            continue
+    return None

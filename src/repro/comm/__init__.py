@@ -1,0 +1,4 @@
+from repro.comm.base import CommStats, Communicator
+from repro.comm.local import LocalComm
+
+__all__ = ["CommStats", "Communicator", "LocalComm"]

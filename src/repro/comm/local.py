@@ -1,0 +1,57 @@
+"""In-process Communicator used by the simulation (and the unit tests).
+
+Messages are passed by reference (zero-copy, like executors sharing a host)
+but *accounted* at their serialised size, so the comm-complexity benchmarks
+measure exactly what a networked transport would move.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+from typing import Any, Dict, List, Tuple
+
+from repro.comm.base import Communicator
+
+
+def _nbytes(payload: Any) -> int:
+    # lazy import: repro.core.round imports this module (cycle otherwise)
+    from repro.core.aggregation import payload_bytes
+    try:
+        if isinstance(payload, dict) and "_wire_bytes" in payload:
+            # compressed partial: count the achieved wire size
+            rest = {k: v for k, v in payload.items()
+                    if k not in ("sums", "_wire_bytes")}
+            return int(payload["_wire_bytes"]) + payload_bytes(rest)
+        return payload_bytes(payload)
+    except Exception:
+        return 0
+
+
+class LocalComm(Communicator):
+    def __init__(self):
+        super().__init__()
+        self._to_exec: Dict[Tuple[int, str], "queue.Queue"] = \
+            collections.defaultdict(queue.Queue)
+        self._to_server: Dict[Tuple[int, str], "queue.Queue"] = \
+            collections.defaultdict(queue.Queue)
+
+    def broadcast(self, payload, executors, tag):
+        nb = _nbytes(payload)
+        for k in executors:
+            self._to_exec[(k, tag)].put(payload)
+        # one logical trip per executor (server pushes K messages)
+        self.stats.add(tag, nb * len(executors), trips=len(executors))
+
+    def send_to_executor(self, executor, payload, tag):
+        self._to_exec[(executor, tag)].put(payload)
+        self.stats.add(tag, _nbytes(payload), trips=1)
+
+    def recv_from_executor(self, executor, tag):
+        return self._to_server[(executor, tag)].get()
+
+    def executor_send(self, executor, payload, tag):
+        self._to_server[(executor, tag)].put(payload)
+        self.stats.add(tag, _nbytes(payload), trips=1)
+
+    def executor_recv(self, executor, tag):
+        return self._to_exec[(executor, tag)].get()

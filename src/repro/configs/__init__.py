@@ -1,0 +1,8 @@
+from repro.configs.base import (ALL_SHAPES, FLConfig, ModelConfig, MoEConfig,
+                                ShapeConfig, SSMConfig, XLSTMConfig,
+                                shape_by_name)
+
+__all__ = [
+    "ALL_SHAPES", "FLConfig", "ModelConfig", "MoEConfig", "ShapeConfig",
+    "SSMConfig", "XLSTMConfig", "shape_by_name",
+]

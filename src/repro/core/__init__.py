@@ -1,0 +1,27 @@
+"""Parrot core — the paper's primary contribution:
+
+  scheduler.py / workload.py — heterogeneity-aware task scheduling (Alg. 3)
+  aggregation.py             — hierarchical local→global aggregation (§4.2)
+  state_manager.py           — client state manager for stateful FL (§3.4)
+  algorithms.py              — 6 FL algorithms over generic pytrees (§5.1)
+  executor.py / round.py     — sequential executors + round engine (Alg. 2)
+  compression.py             — delta compression (top-k EF / int8)
+"""
+from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
+                                    flat_aggregate, global_aggregate)
+from repro.core.algorithms import (ALGORITHMS, ClientData, FLAlgorithm,
+                                   make_algorithm)
+from repro.core.executor import SequentialExecutor
+from repro.core.round import ParrotServer, RoundMetrics, run_flat_reference
+from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
+from repro.core.state_manager import ClientStateManager, owner_host
+from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
+
+__all__ = [
+    "ALGORITHMS", "ClientData", "ClientResult", "ClientStateManager",
+    "ClientTask", "FLAlgorithm", "LocalAggregator", "Op", "ParrotScheduler",
+    "ParrotServer", "RoundMetrics", "RunRecord", "Schedule",
+    "SequentialExecutor", "WorkloadEstimator", "WorkloadModel",
+    "flat_aggregate", "global_aggregate", "make_algorithm", "owner_host",
+    "run_flat_reference",
+]

@@ -1,0 +1,325 @@
+"""FL algorithms (paper §5.1): FedAvg, FedProx, FedNova, Mime (stateless);
+SCAFFOLD, FedDyn (stateful clients).
+
+Each algorithm declares OP types for everything it communicates (paper §3.2)
+and plugs into the Parrot round engine unchanged — the engine neither knows
+nor cares which algorithm runs; it only schedules tasks, folds OP-typed
+payloads and moves client state through the state manager.
+
+The algorithms are generic over the model: they receive a ``grad_fn(params,
+batch) -> (loss, grads)`` and operate on parameter pytrees, so the same code
+trains a logistic regression in the unit tests, a CNN at paper scale in the
+benchmarks, and a reduced LM in the integration tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import ClientResult, Op
+
+Pytree = Any
+GradFn = Callable[[Pytree, Any], Tuple[jnp.ndarray, Pytree]]
+
+
+def tree_add(a, b, scale=1.0):
+    return jax.tree.map(lambda x, y: x + scale * y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+@dataclass
+class ClientData:
+    """One client's local data: an iterable of batches (repeated E epochs by
+    the algorithm) plus its sample count N_m (the scheduling signal)."""
+    batches: List[Any]
+    n_samples: int
+
+
+class FLAlgorithm:
+    name: str = "base"
+    stateful: bool = False
+
+    def __init__(self, grad_fn: GradFn, lr: float, local_epochs: int = 1,
+                 server_lr: float = 1.0, **kw):
+        self.grad_fn = grad_fn
+        self.lr = lr
+        self.local_epochs = local_epochs
+        self.server_lr = server_lr
+
+    # --- interface -------------------------------------------------------
+    def ops(self) -> Dict[str, Op]:
+        raise NotImplementedError
+
+    def broadcast_payload(self, params: Pytree, server_state: Dict) -> Dict:
+        """Θ^r — what the server sends to every executor each round."""
+        return {"params": params}
+
+    def client_init_state(self, params: Pytree) -> Optional[Pytree]:
+        return None
+
+    def client_update(self, payload: Dict, data: ClientData,
+                      state: Optional[Pytree]
+                      ) -> Tuple[ClientResult, Optional[Pytree]]:
+        raise NotImplementedError
+
+    def server_init(self, params: Pytree) -> Dict:
+        return {}
+
+    def server_update(self, params: Pytree, agg: Dict, server_state: Dict,
+                      n_total_clients: int) -> Tuple[Pytree, Dict]:
+        raise NotImplementedError
+
+    # --- shared local-SGD loop --------------------------------------------
+    def _local_sgd(self, params0: Pytree, data: ClientData,
+                   grad_hook: Optional[Callable] = None) -> Tuple[Pytree, int]:
+        """Plain local SGD with an optional per-step gradient correction.
+        Returns (final params, number of local steps tau_m)."""
+        w = params0
+        tau = 0
+        for _ in range(self.local_epochs):
+            for batch in data.batches:
+                _, g = self.grad_fn(w, batch)
+                if grad_hook is not None:
+                    g = grad_hook(w, g)
+                w = tree_add(w, g, -self.lr)
+                tau += 1
+        return w, tau
+
+
+# ---------------------------------------------------------------------------
+# Stateless algorithms
+# ---------------------------------------------------------------------------
+
+class FedAvg(FLAlgorithm):
+    name = "fedavg"
+
+    def ops(self):
+        return {"delta": Op.WEIGHTED_AVG}
+
+    def client_update(self, payload, data, state):
+        w, tau = self._local_sgd(payload["params"], data)
+        delta = tree_sub(w, payload["params"])
+        return ClientResult({"delta": delta}, self.ops(),
+                            weight=float(data.n_samples)), None
+
+    def server_update(self, params, agg, server_state, n_total_clients):
+        return tree_add(params, agg["delta"], self.server_lr), server_state
+
+
+class FedProx(FedAvg):
+    name = "fedprox"
+
+    def __init__(self, *a, mu: float = 0.01, **kw):
+        super().__init__(*a, **kw)
+        self.mu = mu
+
+    def client_update(self, payload, data, state):
+        anchor = payload["params"]
+
+        def hook(w, g):  # g + mu * (w - w_global)
+            return jax.tree.map(lambda gg, ww, aa: gg + self.mu * (ww - aa),
+                                g, w, anchor)
+
+        w, tau = self._local_sgd(anchor, data, hook)
+        delta = tree_sub(w, anchor)
+        return ClientResult({"delta": delta}, self.ops(),
+                            weight=float(data.n_samples)), None
+
+
+class FedNova(FLAlgorithm):
+    """Normalised averaging (Wang et al., 2020): clients return the
+    step-normalised delta plus an aggregation weight tau (the paper's example
+    of an extra averaged parameter)."""
+    name = "fednova"
+
+    def ops(self):
+        return {"norm_delta": Op.WEIGHTED_AVG, "tau": Op.WEIGHTED_AVG}
+
+    def client_update(self, payload, data, state):
+        w, tau = self._local_sgd(payload["params"], data)
+        delta = tree_sub(w, payload["params"])
+        norm_delta = tree_scale(delta, 1.0 / max(tau, 1))
+        return ClientResult(
+            {"norm_delta": norm_delta, "tau": jnp.float32(tau)},
+            self.ops(), weight=float(data.n_samples)), None
+
+    def server_update(self, params, agg, server_state, n_total_clients):
+        tau_eff = agg["tau"]
+        new = tree_add(params, tree_scale(agg["norm_delta"], tau_eff),
+                       self.server_lr)
+        return new, server_state
+
+
+class Mime(FLAlgorithm):
+    """Mime (Karimireddy et al., 2020a): the server optimizer state (momentum)
+    is broadcast and applied — but not updated — during local steps; clients
+    additionally return a full-batch gradient at the *global* params, which
+    the paper treats as a Special Param (collected, not averaged): comm size
+    O(s_e · M_p) cannot be reduced by hierarchical aggregation (§4.2)."""
+    name = "mime"
+
+    def __init__(self, *a, beta: float = 0.9, **kw):
+        super().__init__(*a, **kw)
+        self.beta = beta
+
+    def ops(self):
+        return {"delta": Op.WEIGHTED_AVG, "full_grad": Op.COLLECT}
+
+    def broadcast_payload(self, params, server_state):
+        return {"params": params, "momentum": server_state["momentum"]}
+
+    def server_init(self, params):
+        return {"momentum": tree_zeros_like(params)}
+
+    def client_update(self, payload, data, state):
+        mom = payload["momentum"]
+
+        def hook(w, g):  # momentum-corrected step, momentum frozen locally
+            return jax.tree.map(
+                lambda gg, mm: (1 - self.beta) * gg + self.beta * mm, g, mom)
+
+        w, tau = self._local_sgd(payload["params"], data, hook)
+        # full-batch gradient at the global params (server momentum update)
+        gs = None
+        n = 0
+        for batch in data.batches:
+            _, g = self.grad_fn(payload["params"], batch)
+            gs = g if gs is None else tree_add(gs, g)
+            n += 1
+        full_grad = tree_scale(gs, 1.0 / max(n, 1))
+        delta = tree_sub(w, payload["params"])
+        return ClientResult({"delta": delta, "full_grad": full_grad},
+                            self.ops(), weight=float(data.n_samples)), None
+
+    def server_update(self, params, agg, server_state, n_total_clients):
+        grads = agg["full_grad"]                  # list of (weight, pytree)
+        wsum = sum(w for w, _ in grads)
+        gavg = None
+        for w, g in grads:
+            gavg = tree_scale(g, w / wsum) if gavg is None \
+                else tree_add(gavg, g, w / wsum)
+        mom = jax.tree.map(
+            lambda m, g: self.beta * m + (1 - self.beta) * g,
+            server_state["momentum"], gavg)
+        new = tree_add(params, agg["delta"], self.server_lr)
+        return new, {"momentum": mom}
+
+
+# ---------------------------------------------------------------------------
+# Stateful algorithms
+# ---------------------------------------------------------------------------
+
+class Scaffold(FLAlgorithm):
+    """SCAFFOLD (Karimireddy et al., 2020b): client control variates c_m are
+    client state held by the state manager; the server variate c is broadcast."""
+    name = "scaffold"
+    stateful = True
+
+    def ops(self):
+        return {"delta": Op.WEIGHTED_AVG, "delta_c": Op.AVG}
+
+    def broadcast_payload(self, params, server_state):
+        return {"params": params, "c": server_state["c"]}
+
+    def server_init(self, params):
+        return {"c": tree_zeros_like(params)}
+
+    def client_init_state(self, params):
+        return {"c_m": tree_zeros_like(params)}
+
+    def client_update(self, payload, data, state):
+        c, c_m = payload["c"], state["c_m"]
+
+        def hook(w, g):  # g - c_m + c
+            return jax.tree.map(lambda gg, cm, cc: gg - cm + cc, g, c_m, c)
+
+        anchor = payload["params"]
+        w, tau = self._local_sgd(anchor, data, hook)
+        # option II update of the client variate
+        c_m_new = jax.tree.map(
+            lambda cm, cc, aa, ww: cm - cc + (aa - ww) / (tau * self.lr),
+            c_m, c, anchor, w)
+        delta = tree_sub(w, anchor)
+        delta_c = tree_sub(c_m_new, c_m)
+        return ClientResult({"delta": delta, "delta_c": delta_c}, self.ops(),
+                            weight=float(data.n_samples)), {"c_m": c_m_new}
+
+    def server_update(self, params, agg, server_state, n_total_clients):
+        new = tree_add(params, agg["delta"], self.server_lr)
+        # c += (M_p / M) * avg(delta_c); M_p folded in by the AVG op count
+        frac = agg.get("_n_selected", 0) / max(n_total_clients, 1)
+        c = tree_add(server_state["c"], agg["delta_c"], frac)
+        return new, {"c": c}
+
+
+class FedDyn(FLAlgorithm):
+    """FedDyn (Acar et al., 2021): clients keep the gradient of their local
+    regularised objective as state; the server keeps a drift corrector h."""
+    name = "feddyn"
+    stateful = True
+
+    def __init__(self, *a, alpha: float = 0.1, **kw):
+        super().__init__(*a, **kw)
+        self.alpha = alpha
+
+    def ops(self):
+        return {"delta": Op.WEIGHTED_AVG}
+
+    def server_init(self, params):
+        return {"h": tree_zeros_like(params)}
+
+    def client_init_state(self, params):
+        return {"grad_corr": tree_zeros_like(params)}
+
+    def client_update(self, payload, data, state):
+        anchor = payload["params"]
+        gc = state["grad_corr"]
+
+        def hook(w, g):  # g + alpha * (w - anchor) - grad_corr
+            return jax.tree.map(
+                lambda gg, ww, aa, hh: gg + self.alpha * (ww - aa) - hh,
+                g, w, anchor, gc)
+
+        w, tau = self._local_sgd(anchor, data, hook)
+        gc_new = jax.tree.map(lambda hh, ww, aa: hh - self.alpha * (ww - aa),
+                              gc, w, anchor)
+        delta = tree_sub(w, anchor)
+        return ClientResult({"delta": delta}, self.ops(),
+                            weight=float(data.n_samples)), {"grad_corr": gc_new}
+
+    def server_update(self, params, agg, server_state, n_total_clients):
+        # h^{r+1} = h^r - alpha * frac * delta_avg;
+        # theta^{r+1} = avg(w) - h^{r+1}/alpha
+        #            = theta^r + delta_avg * (1 + frac)   (telescoped form)
+        frac = agg.get("_n_selected", 0) / max(n_total_clients, 1)
+        h = tree_add(server_state["h"], agg["delta"], -self.alpha * frac)
+        new = tree_add(params, agg["delta"], self.server_lr * (1.0 + frac))
+        return new, {"h": h}
+
+
+ALGORITHMS = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "fednova": FedNova,
+    "mime": Mime,
+    "scaffold": Scaffold,
+    "feddyn": FedDyn,
+}
+
+
+def make_algorithm(name: str, grad_fn: GradFn, lr: float, **kw) -> FLAlgorithm:
+    return ALGORITHMS[name](grad_fn, lr, **kw)

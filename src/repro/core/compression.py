@@ -1,0 +1,153 @@
+"""Delta compression for the executor→server partials (distributed-
+optimization trick for 1000+ node scale; DESIGN.md §7).
+
+The hierarchical scheme already cuts comm from O(s_a·M_p) to O(s_a·K);
+compression attacks the remaining s_a factor on the WEIGHTED_AVG entries:
+
+- ``TopKCompressor``: per-executor top-|k| magnitude sparsification with
+  error feedback (the residual is added to the next round's partial, so the
+  scheme stays unbiased in the long run).
+- ``Int8Compressor``: per-chunk symmetric int8 quantisation (4x over fp32).
+
+Both compress only the reducible sums (COLLECT entries pass through), and
+both report the achieved wire size so the comm benchmarks can account them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class CompressedTensor:
+    kind: str
+    shape: tuple
+    dtype: str
+    data: Dict[str, np.ndarray]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in self.data.values())
+
+
+class TopKCompressor:
+    """Magnitude top-k with per-executor error feedback."""
+
+    def __init__(self, fraction: float = 0.01, entries: tuple = ("delta",)):
+        self.fraction = fraction
+        self.entries = entries
+        self._residual: Dict[str, Any] = {}   # keyed by (executor-ish) id
+
+    def _compress_array(self, a: np.ndarray, key: str) -> CompressedTensor:
+        flat = np.asarray(a, np.float32).reshape(-1)
+        res = self._residual.get(key)
+        if res is not None and res.shape == flat.shape:
+            flat = flat + res
+        k = max(1, int(len(flat) * self.fraction))
+        idx = np.argpartition(np.abs(flat), -k)[-k:]
+        vals = flat[idx]
+        new_res = flat.copy()
+        new_res[idx] = 0.0                      # error feedback residual
+        self._residual[key] = new_res
+        return CompressedTensor("topk", tuple(a.shape), str(a.dtype),
+                                {"idx": idx.astype(np.int32),
+                                 "vals": vals.astype(np.float32)})
+
+    def _decompress_array(self, c: CompressedTensor) -> np.ndarray:
+        flat = np.zeros(int(np.prod(c.shape)), np.float32)
+        flat[c.data["idx"]] = c.data["vals"]
+        return flat.reshape(c.shape)
+
+    def compress_partial(self, partial: Dict) -> Dict:
+        out = dict(partial)
+        sums = dict(partial["sums"])
+        for name in self.entries:
+            if name not in sums:
+                continue
+            leaves, treedef = jax.tree.flatten(sums[name])
+            comp = [self._compress_array(np.asarray(l), f"{name}/{i}")
+                    for i, l in enumerate(leaves)]
+            sums[name] = {"__compressed__": True, "treedef": treedef,
+                          "leaves": comp}
+        out["sums"] = sums
+        out["_wire_bytes"] = _wire_bytes(sums)
+        return out
+
+    def decompress_partial(self, partial: Dict) -> Dict:
+        out = dict(partial)
+        sums = dict(partial["sums"])
+        for name, v in list(sums.items()):
+            if isinstance(v, dict) and v.get("__compressed__"):
+                leaves = [jnp.asarray(self._decompress_array(c))
+                          for c in v["leaves"]]
+                sums[name] = jax.tree.unflatten(v["treedef"], leaves)
+        out["sums"] = sums
+        return out
+
+
+class Int8Compressor:
+    """Symmetric per-tensor int8 quantisation with fp32 scale."""
+
+    def __init__(self, entries: tuple = ("delta",)):
+        self.entries = entries
+
+    def _compress_array(self, a: np.ndarray) -> CompressedTensor:
+        f = np.asarray(a, np.float32)
+        scale = float(np.max(np.abs(f))) / 127.0 if f.size else 1.0
+        scale = max(scale, 1e-12)
+        q = np.clip(np.round(f / scale), -127, 127).astype(np.int8)
+        return CompressedTensor("int8", tuple(a.shape), str(a.dtype),
+                                {"q": q, "scale": np.float32(scale)})
+
+    def _decompress_array(self, c: CompressedTensor) -> np.ndarray:
+        return c.data["q"].astype(np.float32) * c.data["scale"]
+
+    def compress_partial(self, partial: Dict) -> Dict:
+        out = dict(partial)
+        sums = dict(partial["sums"])
+        for name in self.entries:
+            if name not in sums:
+                continue
+            leaves, treedef = jax.tree.flatten(sums[name])
+            comp = [self._compress_array(np.asarray(l)) for l in leaves]
+            sums[name] = {"__compressed__": True, "treedef": treedef,
+                          "leaves": comp}
+        out["sums"] = sums
+        out["_wire_bytes"] = _wire_bytes(sums)
+        return out
+
+    def decompress_partial(self, partial: Dict) -> Dict:
+        out = dict(partial)
+        sums = dict(partial["sums"])
+        for name, v in list(sums.items()):
+            if isinstance(v, dict) and v.get("__compressed__"):
+                leaves = [jnp.asarray(self._decompress_array(c))
+                          for c in v["leaves"]]
+                sums[name] = jax.tree.unflatten(v["treedef"], leaves)
+        out["sums"] = sums
+        return out
+
+
+def _wire_bytes(sums: Dict) -> int:
+    tot = 0
+    for v in sums.values():
+        if isinstance(v, dict) and v.get("__compressed__"):
+            tot += sum(c.nbytes for c in v["leaves"])
+        else:
+            tot += sum(int(np.prod(np.shape(l))) * 4
+                       for l in jax.tree.leaves(v))
+    return tot
+
+
+def make_compressor(kind: str, arg: float = 0.01):
+    if kind == "none" or not kind:
+        return None
+    if kind == "topk":
+        return TopKCompressor(fraction=arg)
+    if kind == "int8":
+        return Int8Compressor()
+    raise ValueError(kind)

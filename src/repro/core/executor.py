@@ -1,0 +1,131 @@
+"""Executors: sequential client simulation on a device (Algorithm 2,
+``Device_Executes``).
+
+``SequentialExecutor`` is the real thing: it loads client state, runs the
+algorithm's client_update, saves state, and folds results into the local
+aggregator — measuring per-task wall time for the workload estimator.
+
+``speed_model`` implements the paper's Appendix-A protocol for benchmarking
+scheduling under heterogeneous / unstable devices on homogeneous hardware: a
+per-(executor, round) slowdown ratio η_k(r) scales the *reported* task time.
+We account the scaled time in virtual time rather than sleeping, which makes
+the paper's timing experiments deterministic and fast; the round engine then
+computes the BSP round time as max_k Σ_task time — exactly the paper's
+"server waits for the slowest executor".
+
+Straggler backup tasks: when ``backup_fraction > 0`` the round engine
+re-issues the last tasks of the predicted-slowest queue onto the
+predicted-fastest executor (speculative duplicates; first result wins) —
+tail mitigation at 1000-node scale where a single dead/slow host would
+otherwise stall every round.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.aggregation import ClientResult, LocalAggregator, Op
+from repro.core.algorithms import ClientData, FLAlgorithm
+from repro.core.scheduler import ClientTask
+from repro.core.state_manager import ClientStateManager
+from repro.core.workload import RunRecord
+
+
+SpeedModel = Callable[[int, int], float]   # (executor, round) -> eta >= 0
+
+
+def homogeneous(executor: int, rnd: int) -> float:
+    return 0.0
+
+
+def hetero_gpus(ratios: Dict[int, float]) -> SpeedModel:
+    """Fixed per-executor slowdown ratios η_k (paper Appendix A, Hete. GPU)."""
+    return lambda k, r: ratios.get(k, 0.0)
+
+
+def dynamic_env(n_executors: int, total_rounds: int) -> SpeedModel:
+    """Unstable devices: η_k(r) = 1 + cos(3.14 r / R + k) (paper Appendix A)."""
+    import math
+
+    def eta(k: int, r: int) -> float:
+        return 1.0 + math.cos(3.14 * r / max(total_rounds, 1) + k)
+
+    return eta
+
+
+@dataclass
+class ExecutorReport:
+    executor: int
+    partial: Dict[str, Any]
+    records: List[RunRecord]
+    virtual_time: float          # Σ per-task simulated time (BSP makespan input)
+    wall_time: float
+    n_tasks: int
+    completed_clients: List[int] = field(default_factory=list)
+
+
+class SequentialExecutor:
+    """One Parrot device (a GPU in the paper; a mesh slice on TPU)."""
+
+    def __init__(self, executor_id: int, algorithm: FLAlgorithm,
+                 state_manager: Optional[ClientStateManager] = None,
+                 speed_model: SpeedModel = homogeneous,
+                 use_agg_kernel: bool = False,
+                 fail_at: Optional[Tuple[int, int]] = None):
+        self.id = executor_id
+        self.algorithm = algorithm
+        self.state_manager = state_manager
+        self.speed_model = speed_model
+        self.use_agg_kernel = use_agg_kernel
+        # fault-injection hook for the fault-tolerance tests:
+        # (round, task_index) at which this executor dies.
+        self.fail_at = fail_at
+
+    def run_queue(self, rnd: int, tasks: List[ClientTask], payload: Dict,
+                  data_by_client: Dict[int, ClientData],
+                  skip_clients: Optional[set] = None) -> ExecutorReport:
+        agg = LocalAggregator(self.algorithm.ops(),
+                              use_kernel=self.use_agg_kernel)
+        records: List[RunRecord] = []
+        completed: List[int] = []
+        vtime = 0.0
+        t_start = time.perf_counter()
+        eta = self.speed_model(self.id, rnd)
+        for i, task in enumerate(tasks):
+            if self.fail_at is not None and self.fail_at == (rnd, i):
+                raise ExecutorFailure(self.id, rnd, i)
+            if skip_clients and task.client in skip_clients:
+                continue  # result already produced by a backup replica
+            t0 = time.perf_counter()
+            state = None
+            if self.algorithm.stateful:
+                state = self.state_manager.load(task.client)
+                if state is None:
+                    state = self.algorithm.client_init_state(payload["params"])
+            result, new_state = self.algorithm.client_update(
+                payload, data_by_client[task.client], state)
+            if self.algorithm.stateful and new_state is not None:
+                self.state_manager.save(task.client, new_state)
+            agg.fold(result)
+            completed.append(task.client)
+            measured = time.perf_counter() - t0
+            simulated = measured * (1.0 + eta)
+            vtime += simulated
+            records.append(RunRecord(round=rnd, client=task.client,
+                                     executor=self.id,
+                                     n_samples=task.n_samples,
+                                     time=simulated))
+        return ExecutorReport(
+            executor=self.id, partial=agg.partial(), records=records,
+            virtual_time=vtime, wall_time=time.perf_counter() - t_start,
+            n_tasks=len(completed), completed_clients=completed)
+
+
+class ExecutorFailure(RuntimeError):
+    def __init__(self, executor: int, rnd: int, task_index: int):
+        super().__init__(f"executor {executor} failed at round {rnd}, "
+                         f"task {task_index}")
+        self.executor = executor
+        self.rnd = rnd
+        self.task_index = task_index

@@ -1,0 +1,269 @@
+"""Parrot round engine — Algorithm 2 (``Server_Executes``).
+
+One ``ParrotServer`` owns: the FL algorithm, the heterogeneity-aware
+scheduler + workload estimator, K sequential executors, the client state
+managers, a Communicator, and (optionally) a checkpoint manager and a delta
+compressor.  ``run_round`` is the paper's loop:
+
+  select clients → Task_Schedule (Alg. 3) → broadcast Θ^r + queues →
+  Device_Executes on each executor → collect K partials (one trip each) →
+  GlobalAggregate → server update.
+
+Round time under the BSP/SPMD model is ``max_k Σ_{m∈M_k} T̂_{m,k}`` — the
+makespan the scheduler minimises.  Executor failures mid-round are handled by
+re-running the dead executor's *remaining* queue on the surviving executors
+(clients are idempotent within a round: state saves are keyed per round) and
+shrinking K for subsequent rounds (elastic membership).
+
+``mode="parrot"`` uses hierarchical aggregation; ``mode="flat"`` emulates
+SD-Dist/FA-Dist accounting (every client result shipped to the server
+individually) for the Table-1 comparison benchmarks.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.comm.base import Communicator
+from repro.comm.local import LocalComm
+from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
+                                    flat_aggregate, global_aggregate,
+                                    payload_bytes)
+from repro.core.algorithms import ClientData, FLAlgorithm
+from repro.core.executor import (ExecutorFailure, ExecutorReport,
+                                 SequentialExecutor)
+from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
+from repro.core.workload import WorkloadEstimator
+
+
+@dataclass
+class RoundMetrics:
+    round: int
+    makespan: float               # BSP round time (max executor virtual time)
+    wall_time: float
+    schedule_time: float
+    estimate_time: float
+    predicted_makespan: float
+    comm_bytes: int
+    comm_trips: int
+    n_clients: int
+    n_executors: int
+    estimation_error: float = float("nan")
+    failures: int = 0
+    extra: Dict[str, float] = field(default_factory=dict)
+
+
+class ParrotServer:
+    def __init__(self, *, params: Any, algorithm: FLAlgorithm,
+                 executors: Sequence[SequentialExecutor],
+                 data_by_client: Dict[int, ClientData],
+                 clients_per_round: int,
+                 scheduler_policy: str = "parrot",
+                 time_window: int = 0,
+                 warmup_rounds: int = 1,
+                 comm: Optional[Communicator] = None,
+                 compressor: Optional[Any] = None,
+                 checkpoint_manager: Optional[Any] = None,
+                 mode: str = "parrot",
+                 parallel_dispatch: bool = False,
+                 overlap_scheduling: bool = False,
+                 seed: int = 0):
+        self.params = params
+        self.algorithm = algorithm
+        self.executors: Dict[int, SequentialExecutor] = {e.id: e for e in executors}
+        self.data_by_client = data_by_client
+        self.clients_per_round = clients_per_round
+        self.estimator = WorkloadEstimator(time_window=time_window)
+        self.scheduler = ParrotScheduler(self.estimator,
+                                         warmup_rounds=warmup_rounds,
+                                         policy=scheduler_policy)
+        self.comm = comm or LocalComm()
+        self.compressor = compressor
+        self.checkpoint_manager = checkpoint_manager
+        self.mode = mode
+        self.parallel_dispatch = parallel_dispatch
+        self.overlap_scheduling = overlap_scheduling
+        self._next_tasks: Optional[List[ClientTask]] = None
+        self.server_state = algorithm.server_init(params)
+        self.rng = np.random.default_rng(seed)
+        self.round = 0
+        self.history: List[RoundMetrics] = []
+        self._pending_schedule: Optional[Schedule] = None
+
+    # ------------------------------------------------------------------
+    def select_clients(self) -> List[ClientTask]:
+        ids = self.rng.choice(sorted(self.data_by_client),
+                              size=min(self.clients_per_round,
+                                       len(self.data_by_client)),
+                              replace=False)
+        return [ClientTask(int(c), self.data_by_client[int(c)].n_samples)
+                for c in ids]
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, rnd: int, schedule: Schedule, payload: Dict
+                  ) -> List[ExecutorReport]:
+        live = list(self.executors)
+        self.comm.broadcast(payload, live, tag="broadcast")
+        reports: List[ExecutorReport] = []
+        failed: List[int] = []
+        done_clients: set = set()
+
+        def run(k: int) -> ExecutorReport:
+            return self.executors[k].run_queue(
+                rnd, schedule.queue(k), payload, self.data_by_client)
+
+        if self.parallel_dispatch:
+            with cf.ThreadPoolExecutor(max_workers=len(live)) as pool:
+                futs = {pool.submit(run, k): k for k in live}
+                for fut in cf.as_completed(futs):
+                    k = futs[fut]
+                    try:
+                        reports.append(fut.result())
+                    except ExecutorFailure as e:
+                        failed.append(k)
+        else:
+            for k in live:
+                try:
+                    reports.append(run(k))
+                except ExecutorFailure:
+                    failed.append(k)
+
+        # ---- fault handling: re-run failed queues on the survivors -------
+        if failed:
+            for rep in reports:
+                done_clients.update(rep.completed_clients)
+            survivors = [k for k in live if k not in failed]
+            if not survivors:
+                raise RuntimeError("all executors failed")
+            leftovers: List[ClientTask] = []
+            for k in failed:
+                leftovers.extend(t for t in schedule.queue(k)
+                                 if t.client not in done_clients)
+                del self.executors[k]          # elastic K shrink
+            for i, t in enumerate(leftovers):  # round-robin retry placement
+                k = survivors[i % len(survivors)]
+                rep = self.executors[k].run_queue(
+                    rnd, [t], payload, self.data_by_client)
+                reports.append(rep)
+
+        for rep in reports:
+            self.comm.executor_send(rep.executor,
+                                    self._maybe_compress(rep.partial),
+                                    tag="partial")
+            self.comm.recv_from_executor(rep.executor, tag="partial")
+        return reports, len(failed)
+
+    def _maybe_compress(self, partial: Dict) -> Dict:
+        if self.compressor is None:
+            return partial
+        return self.compressor.compress_partial(partial)
+
+    def _maybe_decompress(self, partial: Dict) -> Dict:
+        if self.compressor is None:
+            return partial
+        return self.compressor.decompress_partial(partial)
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> RoundMetrics:
+        rnd = self.round
+        t_wall = time.perf_counter()
+        if self._next_tasks is not None:
+            tasks, self._next_tasks = self._next_tasks, None
+        else:
+            tasks = self.select_clients()
+
+        # compute-comm overlap: the schedule for this round may have been
+        # prepared while the previous round's global reduce was in flight
+        # (host-side O(K·M_p) work hidden behind the collective).
+        if self._pending_schedule is not None:
+            schedule, overlapped = self._pending_schedule, True
+            self._pending_schedule = None
+        else:
+            schedule, overlapped = self.scheduler.schedule(
+                rnd, tasks, list(self.executors)), False
+
+        payload = self.algorithm.broadcast_payload(self.params,
+                                                   self.server_state)
+        reports, n_failed = self._dispatch(rnd, schedule, payload)
+
+        # ---- aggregation ------------------------------------------------
+        # overlap: prepare round r+1's schedule "while the reduce is in
+        # flight" (before the global_aggregate below consumes the partials)
+        if self.overlap_scheduling:
+            self.estimator.record_many(
+                [rec for r in reports for rec in r.records])
+            self._next_tasks = self.select_clients()
+            self._pending_schedule = self.scheduler.schedule(
+                rnd + 1, self._next_tasks, list(self.executors))
+
+        partials = [self._maybe_decompress(r.partial) for r in reports]
+        ops = self.algorithm.ops()
+        agg = global_aggregate(partials, ops)
+        agg["_n_selected"] = sum(r.n_tasks for r in reports)
+        self.params, self.server_state = self.algorithm.server_update(
+            self.params, agg, self.server_state, len(self.data_by_client))
+
+        # ---- bookkeeping --------------------------------------------------
+        records = [rec for r in reports for rec in r.records]
+        err = float("nan")
+        if self.estimator.last_fit:
+            err = self.estimator.estimation_error(self.estimator.last_fit,
+                                                  records)
+        if not self.overlap_scheduling:   # overlap path already recorded them
+            self.estimator.record_many(records)
+        makespan = max((r.virtual_time for r in reports), default=0.0)
+        stats = self.comm.stats.reset()
+        metrics = RoundMetrics(
+            round=rnd, makespan=makespan,
+            wall_time=time.perf_counter() - t_wall,
+            schedule_time=0.0 if overlapped else schedule.schedule_time_s,
+            estimate_time=0.0 if overlapped else schedule.estimate_time_s,
+            predicted_makespan=schedule.predicted_makespan,
+            comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
+            n_clients=len(tasks), n_executors=len(self.executors),
+            estimation_error=err, failures=n_failed)
+        self.history.append(metrics)
+        self.round += 1
+
+        if self.checkpoint_manager is not None:
+            self.checkpoint_manager.maybe_save(self)
+        return metrics
+
+    def run(self, n_rounds: int) -> List[RoundMetrics]:
+        return [self.run_round() for _ in range(n_rounds)]
+
+
+def run_flat_reference(params, algorithm: FLAlgorithm,
+                       data_by_client: Dict[int, ClientData],
+                       clients_per_round: int, n_rounds: int, seed: int = 0,
+                       state_store: Optional[Dict[int, Any]] = None):
+    """Single-process original-FL reference (SP scheme): the ground truth the
+    hierarchical scheme must match (used by the Fig. 4 equivalence tests)."""
+    rng = np.random.default_rng(seed)
+    server_state = algorithm.server_init(params)
+    state_store = {} if state_store is None else state_store
+    for rnd in range(n_rounds):
+        ids = rng.choice(sorted(data_by_client),
+                         size=min(clients_per_round, len(data_by_client)),
+                         replace=False)
+        results = []
+        for c in ids:
+            c = int(c)
+            state = state_store.get(c)
+            if algorithm.stateful and state is None:
+                state = algorithm.client_init_state(params)
+            payload = algorithm.broadcast_payload(params, server_state)
+            res, new_state = algorithm.client_update(
+                payload, data_by_client[c], state)
+            if algorithm.stateful and new_state is not None:
+                state_store[c] = new_state
+            results.append(res)
+        agg = flat_aggregate(results, algorithm.ops())
+        agg["_n_selected"] = len(results)
+        params, server_state = algorithm.server_update(
+            params, agg, server_state, len(data_by_client))
+    return params, server_state

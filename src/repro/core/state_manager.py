@@ -1,0 +1,225 @@
+"""Client state manager for stateful FL algorithms (paper §3.4).
+
+Simulating M stateful clients needs O(s_d · M) state which cannot live in
+accelerator (or even host) memory at scale; Parrot's manager keeps a bounded
+in-memory working set and spills the rest to disk, loading each client's
+state on demand when an executor begins simulating it.  Memory becomes
+O(s_d · K) (one live state per executor) and disk O(s_d · M) — Table 1.
+
+Multi-host design: client ids are hash-partitioned across hosts
+(``owner_host``); each host's manager only ever holds its shard, so the
+aggregate footprint scales with hosts.  The manager is checkpointable
+(incremental: only dirty states are rewritten) for fault tolerance.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import json
+import os
+import pickle
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+
+def owner_host(client_id: int, n_hosts: int) -> int:
+    """Deterministic hash partition of client state ownership."""
+    h = hashlib.blake2s(str(client_id).encode(), digest_size=4).digest()
+    return int.from_bytes(h, "little") % max(n_hosts, 1)
+
+
+def _tree_bytes(tree: Any) -> int:
+    return sum(a.nbytes for a in jax.tree.leaves(tree)
+               if hasattr(a, "nbytes"))
+
+
+class ClientStateManager:
+    """LRU-bounded in-memory store with disk spill.
+
+    Parameters
+    ----------
+    spill_dir: directory for spilled / checkpointed state files.
+    memory_budget_bytes: in-memory working-set bound; 0 -> unbounded
+        (useful for measuring the no-manager baseline in benchmarks).
+    """
+
+    def __init__(self, spill_dir: str, memory_budget_bytes: int = 1 << 28,
+                 host: int = 0, n_hosts: int = 1):
+        self.spill_dir = spill_dir
+        self.memory_budget = memory_budget_bytes
+        self.host = host
+        self.n_hosts = n_hosts
+        os.makedirs(spill_dir, exist_ok=True)
+        self._mem: "collections.OrderedDict[int, Any]" = collections.OrderedDict()
+        self._mem_bytes = 0
+        self._dirty: set = set()
+        self._on_disk: set = set()
+        self._lock = threading.RLock()
+        self.stats = {"hits": 0, "misses": 0, "spills": 0, "loads": 0}
+
+    # ------------------------------------------------------------------ io
+    def _path(self, client: int) -> str:
+        return os.path.join(self.spill_dir, f"client_{client}.pkl")
+
+    def _spill_one(self) -> None:
+        client, tree = self._mem.popitem(last=False)          # LRU eviction
+        self._mem_bytes -= _tree_bytes(tree)
+        if client in self._dirty:
+            self._write(client, tree)
+            self._dirty.discard(client)
+        self.stats["spills"] += 1
+
+    def _write(self, client: int, tree: Any) -> None:
+        path = self._path(client)
+        fd, tmp = tempfile.mkstemp(dir=self.spill_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(jax.tree.map(np.asarray, tree), f,
+                            protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)                             # atomic
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self._on_disk.add(client)
+
+    def _read(self, client: int) -> Any:
+        with open(self._path(client), "rb") as f:
+            return pickle.load(f)
+
+    # ----------------------------------------------------------------- api
+    def save(self, client: int, state: Any) -> None:
+        """``Save_State`` in Algorithm 2."""
+        assert owner_host(client, self.n_hosts) == self.host or self.n_hosts == 1, \
+            f"client {client} not owned by host {self.host}"
+        with self._lock:
+            state = jax.tree.map(np.asarray, state)
+            if client in self._mem:
+                self._mem_bytes -= _tree_bytes(self._mem.pop(client))
+            self._mem[client] = state
+            self._mem_bytes += _tree_bytes(state)
+            self._dirty.add(client)
+            while self.memory_budget and self._mem_bytes > self.memory_budget \
+                    and len(self._mem) > 1:
+                self._spill_one()
+
+    def load(self, client: int, default: Any = None) -> Any:
+        """``Load_State`` in Algorithm 2 (LRU touch)."""
+        with self._lock:
+            if client in self._mem:
+                self.stats["hits"] += 1
+                self._mem.move_to_end(client)
+                return self._mem[client]
+            if client in self._on_disk:
+                self.stats["misses"] += 1
+                self.stats["loads"] += 1
+                tree = self._read(client)
+                self._mem[client] = tree
+                self._mem_bytes += _tree_bytes(tree)
+                while self.memory_budget and self._mem_bytes > self.memory_budget \
+                        and len(self._mem) > 1:
+                    self._spill_one()
+                return tree
+            return default
+
+    def __contains__(self, client: int) -> bool:
+        return client in self._mem or client in self._on_disk
+
+    def known_clients(self) -> List[int]:
+        return sorted(set(self._mem) | self._on_disk)
+
+    @property
+    def memory_bytes(self) -> int:
+        return self._mem_bytes
+
+    def disk_bytes(self) -> int:
+        tot = 0
+        for c in self._on_disk:
+            try:
+                tot += os.path.getsize(self._path(c))
+            except OSError:
+                pass
+        return tot
+
+    # -------------------------------------------------------- checkpointing
+    def checkpoint(self, ckpt_dir: str) -> None:
+        """Flush dirty states to disk and hard-link the shard into a
+        checkpoint directory (incremental: clean states are only linked)."""
+        os.makedirs(ckpt_dir, exist_ok=True)
+        with self._lock:
+            for client in list(self._dirty):
+                self._write(client, self._mem[client])
+            self._dirty.clear()
+            manifest = {"host": self.host, "n_hosts": self.n_hosts,
+                        "clients": sorted(self._on_disk)}
+            for client in self._on_disk:
+                dst = os.path.join(ckpt_dir, f"client_{client}.pkl")
+                if os.path.exists(dst):
+                    os.unlink(dst)
+                try:
+                    os.link(self._path(client), dst)
+                except OSError:
+                    shutil.copy2(self._path(client), dst)
+            with open(os.path.join(ckpt_dir, f"state_manifest_{self.host}.json"),
+                      "w") as f:
+                json.dump(manifest, f)
+
+    def restore(self, ckpt_dir: str) -> int:
+        """Re-adopt a checkpointed shard; returns number of clients restored."""
+        path = os.path.join(ckpt_dir, f"state_manifest_{self.host}.json")
+        if not os.path.exists(path):
+            return 0
+        with open(path) as f:
+            manifest = json.load(f)
+        n = 0
+        with self._lock:
+            # adopt-exactly: drop any state not in the manifest (a later
+            # round's leftovers would otherwise leak into the replay)
+            self._mem.clear()
+            self._mem_bytes = 0
+            self._dirty.clear()
+            for client in list(self._on_disk):
+                if client not in set(manifest["clients"]):
+                    try:
+                        os.unlink(self._path(client))
+                    except OSError:
+                        pass
+            self._on_disk.clear()
+            for client in manifest["clients"]:
+                src = os.path.join(ckpt_dir, f"client_{client}.pkl")
+                if not os.path.exists(src):
+                    continue
+                dst = self._path(client)
+                if os.path.abspath(src) != os.path.abspath(dst):
+                    shutil.copy2(src, dst)
+                self._on_disk.add(client)
+                n += 1
+        return n
+
+    def rebalance(self, new_n_hosts: int, peers: Dict[int, "ClientStateManager"]) -> int:
+        """Elastic membership change: re-hash ownership and hand off states
+        that now belong to other hosts.  Returns number moved."""
+        moved = 0
+        with self._lock:
+            for client in self.known_clients():
+                new_owner = owner_host(client, new_n_hosts)
+                if new_owner == self.host:
+                    continue
+                state = self.load(client)
+                peers[new_owner].save(client, state)
+                if client in self._mem:
+                    self._mem_bytes -= _tree_bytes(self._mem.pop(client))
+                if client in self._on_disk:
+                    self._on_disk.discard(client)
+                    try:
+                        os.unlink(self._path(client))
+                    except OSError:
+                        pass
+                self._dirty.discard(client)
+                moved += 1
+        self.n_hosts = new_n_hosts
+        return moved

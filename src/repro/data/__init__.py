@@ -1,0 +1,8 @@
+from repro.data.partition import (dirichlet_label_partition, natural_sizes,
+                                  partition_sizes, quantity_skew_sizes)
+from repro.data.synthetic import make_classification_clients, make_lm_clients
+
+__all__ = [
+    "dirichlet_label_partition", "natural_sizes", "partition_sizes",
+    "quantity_skew_sizes", "make_classification_clients", "make_lm_clients",
+]

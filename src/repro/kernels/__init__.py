@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+  flash_attention   — online-softmax attention (train/prefill hot-spot)
+  agg_weighted_sum  — Parrot hierarchical-aggregation fold (memory-bound)
+  ssm_scan          — SSD chunked selective scan (hymba / xlstm mixers)
+  rmsnorm           — fused normalisation
+
+``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

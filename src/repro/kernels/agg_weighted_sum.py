@@ -1,0 +1,55 @@
+"""Hierarchical-aggregation fold kernel: ``acc += Σ_c w_c · delta_c``.
+
+This is Parrot's memory-bound hot loop (LocalAggregate folds every simulated
+client's multi-hundred-MB delta into the fp32 partial).  Arithmetic intensity
+is ~0.5 FLOP/byte, so the kernel's job is purely to stream HBM→VMEM at line
+rate with the multiply-add fused on the VPU — one pass over the deltas, fp32
+accumulation regardless of delta dtype (bf16 deltas halve the bytes moved,
+which is the §Perf lever for the aggregation benchmark).
+
+Tiling: 1-D grid over n/BLK element blocks; the (C, BLK) delta tile and the
+(BLK,) accumulator tile live in VMEM; weights ride in SMEM-like fashion as a
+small replicated block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(w_ref, acc_ref, delta_ref, o_ref):
+    acc = acc_ref[...].astype(jnp.float32)            # (blk,)
+    d = delta_ref[...].astype(jnp.float32)            # (C, blk)
+    w = w_ref[...].astype(jnp.float32)                # (C,)
+    o_ref[...] = acc + jax.lax.dot_general(
+        w, d, (((0,), (0,)), ((), ())))               # w @ d -> (blk,)
+
+
+def agg_weighted_sum(acc, deltas, weights, *, blk: int = 65536,
+                     interpret: bool = True):
+    """acc: (n,) fp32; deltas: (C, n); weights: (C,) -> (n,) fp32."""
+    (n,) = acc.shape
+    C = deltas.shape[0]
+    blk = min(blk, n)
+    pad = (-n) % blk
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+    npad = n + pad
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(npad // blk,),
+        in_specs=[
+            pl.BlockSpec((C,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((C, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(weights, acc, deltas)
+    return out[:n]

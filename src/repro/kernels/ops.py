@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container every kernel runs with ``interpret=True`` (Python
+evaluation of the kernel body — the validation mode); on TPU backends the
+wrappers select the compiled path automatically.  The model code calls these
+through ``cfg.attention_impl="pallas"`` etc.; the dry-run lowers the pure-jnp
+references instead so the HLO stays analysable (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import agg_weighted_sum as _agg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssm_scan as _ssm
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128):
+    """q, k, v: (B, S, H, hd) MHA layout (GQA callers pre-repeat kv)."""
+    B, S, H, hd = q.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, v.shape[1], hd)
+    o = _fa.flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                                 blk_q=blk_q, blk_k=blk_k,
+                                 interpret=_use_interpret())
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def agg_weighted_sum(acc, deltas, weights):
+    """acc: (n,) fp32; deltas: (C, n); weights: (C,)."""
+    return _agg.agg_weighted_sum(acc, deltas, weights,
+                                 interpret=_use_interpret())
+
+
+def agg_fold(acc, delta, weight: float):
+    """Fold a single client delta (any pytree leaf shape) into the fp32
+    accumulator — the LocalAggregator fast path."""
+    flat_acc = acc.reshape(-1).astype(jnp.float32)
+    flat_d = delta.reshape(1, -1)
+    w = jnp.asarray([weight], jnp.float32)
+    return agg_weighted_sum(flat_acc, flat_d, w).reshape(acc.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssm_scan(q, k, v, log_a, *, chunk: int = 128):
+    """q, k: (BH, S, N); v: (BH, S, P); log_a: (BH, S)."""
+    return _ssm.ssm_scan(q, k, v, log_a, chunk=chunk,
+                         interpret=_use_interpret())
+
+
+@jax.jit
+def rmsnorm(x, g, eps: float = 1e-5):
+    """x: (..., d) -> fused rmsnorm over the last axis."""
+    shape = x.shape
+    out = _rms.rmsnorm(x.reshape(-1, shape[-1]), g, eps=eps,
+                       interpret=_use_interpret())
+    return out.reshape(shape)

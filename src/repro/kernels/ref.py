@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` computes the same function as the corresponding kernel with
+plain jax.numpy, fp32 accumulation, no tiling.  Kernel tests sweep shapes and
+dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jnp.ndarray:
+    """q, k, v: (B, S, H, hd) (MHA layout; GQA callers pre-repeat kv)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = (1.0 / jnp.sqrt(jnp.float32(hd))) if scale is None else scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > (qpos - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def agg_weighted_sum_ref(acc, deltas, weights) -> jnp.ndarray:
+    """acc: (n,) fp32; deltas: (C, n) any float dtype; weights: (C,) fp32.
+    Returns acc + Σ_c w_c · deltas[c] in fp32 — the hierarchical-aggregation
+    fold (LocalAggregate inner loop)."""
+    return acc + jnp.einsum("c,cn->n", weights.astype(jnp.float32),
+                            deltas.astype(jnp.float32))
+
+
+def ssm_scan_ref(q, k, v, log_a, h0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential scalar-decay linear recurrence (SSD/mLSTM core).
+
+    q, k: (BH, S, N); v: (BH, S, P); log_a: (BH, S); h0: (BH, N, P).
+    Returns (y: (BH, S, P), h_final)."""
+
+    def body(h, t):
+        a = jnp.exp(log_a[:, t].astype(jnp.float32))
+        h = a[:, None, None] * h + \
+            k[:, t, :, None].astype(jnp.float32) * v[:, t, None, :].astype(jnp.float32)
+        y = jnp.einsum("bn,bnp->bp", q[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h, ys = jax.lax.scan(body, h0.astype(jnp.float32), jnp.arange(q.shape[1]))
+    return ys.transpose(1, 0, 2).astype(v.dtype), h
+
+
+def rmsnorm_ref(x, g, eps: float = 1e-5) -> jnp.ndarray:
+    """x: (T, d); g: (d,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)

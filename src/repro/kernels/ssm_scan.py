@@ -1,0 +1,90 @@
+"""SSD chunked selective-scan Pallas kernel (Mamba-2 style; DESIGN.md §2).
+
+Grid = (BH, S/L) with the chunk dimension innermost; TPU sequential-grid
+semantics let the inter-chunk state h (N, P) persist in VMEM scratch, so the
+recurrence crosses chunk boundaries without HBM round-trips.  Within a chunk
+everything is (L × L) masked matmuls — MXU work, which is the whole point of
+adapting the GPU selective-scan to TPU this way.
+
+Per-step VMEM: q,k (L,N) + v (L,P) + decay/score (L,L) + h (N,P) — with
+L=128..256, N=16..64, P≤512 this stays in the low MBs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(q_ref, k_ref, v_ref, la_ref, y_ref, hout_ref, h_scr, *,
+                L: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (L, N)
+    k = k_ref[0].astype(jnp.float32)          # (L, N)
+    v = v_ref[0].astype(jnp.float32)          # (L, P)
+    la = la_ref[0].astype(jnp.float32)        # (L,)
+
+    cum = jnp.cumsum(la)                      # inclusive log-decay prefix
+    total = cum[-1]
+    # intra-chunk: M[t,s] = (q_t·k_s)·exp(cum_t - cum_s) for s <= t
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (L, L)
+    decay = cum[:, None] - cum[None, :]
+    tmask = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    gate = jnp.where(tmask, jnp.exp(decay), 0.0)
+    y_intra = jax.lax.dot_general(scores * gate, v, (((1,), (0,)), ((), ())))
+    # inter-chunk: y_t += exp(cum_t) * q_t @ h
+    qdec = q * jnp.exp(cum)[:, None]
+    y_inter = jax.lax.dot_general(qdec, h_scr[...], (((1,), (0,)), ((), ())))
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state update: h = exp(total)·h + Σ_s exp(total - cum_s) k_s v_sᵀ
+    kdec = k * jnp.exp(total - cum)[:, None]
+    h_scr[...] = jnp.exp(total) * h_scr[...] + \
+        jax.lax.dot_general(kdec, v, (((0,), (0,)), ((), ())))
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hout_ref[0] = h_scr[...]
+
+
+def ssm_scan(q, k, v, log_a, *, chunk: int = 128, interpret: bool = True):
+    """q, k: (BH, S, N); v: (BH, S, P); log_a: (BH, S) (log decay ≤ 0).
+
+    Returns (y: (BH, S, P), h_final: (BH, N, P) fp32).  h0 = 0 (prefill
+    convention; decode carries state outside the kernel)."""
+    BH, S, N = q.shape
+    P = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    n_chunks = S // L
+
+    kernel = functools.partial(_ssm_kernel, L=L, n_chunks=n_chunks)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), v.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_a)
+    return y, h

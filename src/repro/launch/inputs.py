@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns everything the dry-run needs to lower a
+cell: the step function, the abstract arguments, and their shardings under a
+given mesh.  The same builders feed the launchers (train.py / serve.py) with
+real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm, transformer
+from repro.sharding import specs as shard_specs
+
+
+@dataclass
+class CellSpec:
+    step_fn: Callable
+    args: Tuple[Any, ...]                  # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...] = ()
+    static_desc: str = ""
+
+
+def params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _inputs_sds(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.input_kind == "embeddings":
+        return jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                lr: float = 0.05) -> CellSpec:
+    B, S = shape.global_batch, shape.seq_len
+    p_sds = params_abstract(cfg)
+    p_shard = shard_specs.params_shardings(p_sds, mesh)
+    bspec = lambda sds, seq_axis=None: NamedSharding(
+        mesh, shard_specs.batch_spec(sds.shape, mesh, seq_axis=seq_axis))
+
+    if shape.kind == "train":
+        step = lm.make_train_step(cfg, lr)
+        inputs = _inputs_sds(cfg, B, S)
+        labels = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        batch = {"inputs": inputs, "labels": labels}
+        batch_shard = {"inputs": bspec(inputs, seq_axis=1),
+                       "labels": bspec(labels, seq_axis=1)}
+        return CellSpec(step, (p_sds, batch), (p_shard, batch_shard),
+                        donate_argnums=(0,),
+                        static_desc=f"train_step B={B} S={S}")
+
+    if shape.kind == "prefill":
+        step = lm.make_prefill_step(cfg, B, S)
+        inputs = _inputs_sds(cfg, B, S)
+        return CellSpec(step, (p_sds, inputs),
+                        (p_shard, bspec(inputs, seq_axis=1)),
+                        static_desc=f"prefill B={B} S={S}")
+
+    # decode / long_decode: one new token against a seq_len cache
+    step = lm.make_decode_step(cfg)
+    inputs = _inputs_sds(cfg, B, 1)
+    caches = jax.eval_shape(
+        lambda: transformer.stack_cache(cfg, B, S, jnp.dtype(cfg.dtype)))
+    cache_shard = shard_specs.caches_shardings(caches, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    return CellSpec(step, (p_sds, inputs, caches, pos),
+                    (p_shard, bspec(inputs), cache_shard, pos_shard),
+                    donate_argnums=(2,),
+                    static_desc=f"decode B={B} cache={S}")

@@ -1,0 +1,77 @@
+"""Serving driver: batched prefill + decode against any registry arch.
+
+On CPU this runs reduced configs end-to-end (generates real tokens); the
+full-config path is exercised by the dry-run.  Demonstrates the serve side
+of the framework: ring-buffer KV caches, recurrent state carry-through, and
+batched request scheduling.
+
+  python -m repro.launch.serve --arch hymba-1.5b --batch 4 --prompt-len 64 \
+      --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (not reduced) config — dry-run scale")
+    args = ap.parse_args(argv)
+
+    from repro.configs.registry import get_arch
+    from repro.models import lm
+
+    cfg = get_arch(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+
+    if cfg.input_kind == "embeddings":
+        prompt = jax.random.normal(key, (B, P, cfg.d_model))
+    else:
+        prompt = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+
+    prefill = jax.jit(lm.make_prefill_step(cfg, B, P, cache_len=P + G))
+    decode = jax.jit(lm.make_decode_step(cfg))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, prompt)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out_tokens = [toks]
+    t0 = time.perf_counter()
+    for i in range(G - 1):
+        step_in = toks
+        if cfg.input_kind == "embeddings":
+            # stub frontend: embed generated ids through the token table
+            step_in = jnp.take(params["embed"]["w"], toks, axis=0)
+        logits, caches = decode(params, step_in, caches, jnp.int32(P + i))
+        toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out_tokens.append(toks)
+    jax.block_until_ready(toks)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"[serve] arch={cfg.name} B={B} prompt={P} gen={G}")
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms "
+          f"({B*P/t_prefill:.0f} tok/s); decode {t_decode*1e3:.1f} ms "
+          f"({B*(G-1)/max(t_decode,1e-9):.0f} tok/s)")
+    print(f"[serve] sample tokens: {gen[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

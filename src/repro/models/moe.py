@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN with top-k routing and fixed expert capacity.
+
+Two dispatch implementations, selected by ``MoEConfig.dispatch_impl``:
+
+- ``gshard_einsum``: the classic GShard one-hot dispatch/combine einsums over
+  token groups.  SPMD-safe under GSPMD partitioning at 512 devices (only
+  einsums + cumsums — no data-dependent gathers), so it is the baseline used
+  for the dry-run.  Its FLOP overhead is O(group * E * capacity * d) per group
+  which is visible in the roofline "useful FLOPs" ratio — the perf hillclimb
+  replaces it for top-1 models.
+- ``gather``: index-based dispatch (argsort by expert, fixed-capacity gather /
+  scatter-add).  ~E*capacity/ (k*S) times cheaper in FLOPs; used after the
+  §Perf iteration validated its collective behaviour.
+
+Experts are SwiGLU.  An auxiliary load-balancing loss (Switch-style) is
+returned alongside the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def moe_init(key, cfg) -> dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.n_experts
+    dtype = jnp.dtype(cfg.dtype)
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    import numpy as np
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "router": (jax.random.normal(kr, (d, E), jnp.float32) * 0.02).astype(dtype),
+        "wi": (jax.random.normal(k1, (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wg": (jax.random.normal(k2, (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(k3, (E, f, d), jnp.float32) / np.sqrt(f)).astype(dtype),
+    }
+
+
+def _routing(params, xg, m):
+    """xg: (G, S, d) grouped tokens -> gating info.
+
+    Returns (probs (G,S,E) fp32, topk_prob (G,S,k), topk_idx (G,S,k), aux_loss).
+    """
+    # matmul in model dtype: upcasting xg here would promote the whole
+    # residual cotangent to f32 (observed: 2x backward activation memory)
+    logits = (xg @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G,S,E)
+    topk_prob, topk_idx = jax.lax.top_k(probs, m.top_k)          # (G,S,k)
+    # normalise combine weights over the selected experts
+    topk_prob = topk_prob / jnp.maximum(
+        jnp.sum(topk_prob, axis=-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e (fraction routed to e * mean prob e)
+    E = probs.shape[-1]
+    sel = jax.nn.one_hot(topk_idx[..., 0], E, dtype=jnp.float32)  # top-1 counts
+    frac = jnp.mean(sel, axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return probs, topk_prob, topk_idx, aux
+
+
+def _expert_ffn(params, h):
+    """h: (E, C, d) -> (E, C, d) via per-expert SwiGLU (grouped einsums).
+
+    Weights pass through an explicit ZeRO gather point (constrain) so the
+    contraction dims are replicated at use: forward all-gathers the weight
+    shards once per layer; backward reduce-scatters the weight grads — no
+    partial-sum all-reduce of the (E, C, d/f) activation buffers."""
+    from repro.sharding.specs import constrain
+    wi = constrain(params["wi"], "moe_weight")
+    wg = constrain(params["wg"], "moe_weight")
+    wo = constrain(params["wo"], "moe_weight_row")
+    up = jnp.einsum("ecd,edf->ecf", h, wi)
+    gate = jnp.einsum("ecd,edf->ecf", h, wg)
+    act = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", act, wo)
+
+
+def _moe_gshard(params, xg, m):
+    """GShard einsum dispatch.  xg: (G, S, d)."""
+    G, S, d = xg.shape
+    E, k = m.n_experts, m.top_k
+    C = max(1, int(m.capacity_factor * S * k / E))
+    probs, topk_prob, topk_idx, aux = _routing(params, xg, m)
+
+    # position of each (token, k) assignment within its expert's buffer
+    onehot_e = jax.nn.one_hot(topk_idx, E, dtype=jnp.int32)      # (G,S,k,E)
+    flat = onehot_e.reshape(G, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                           # (G,S*k,E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, S, k)          # (G,S,k)
+    # one_hot of an out-of-range index is all-zero, so capacity overflow
+    # (pos >= C) drops the token with no extra masking.
+    onehot_c = jax.nn.one_hot(pos, C, dtype=xg.dtype)            # (G,S,k,C)
+    oe = onehot_e.astype(xg.dtype)
+    # dispatch tensor (G,S,E,C): 1 where token s fills slot (e,c)
+    disp = jnp.einsum("gske,gskc->gsec", oe, onehot_c)
+    comb = jnp.einsum("gsk,gske,gskc->gsec",
+                      topk_prob.astype(xg.dtype), oe, onehot_c)
+
+    h = jnp.einsum("gsec,gsd->gecd", disp, xg)                   # (G,E,C,d)
+    out_e = jax.vmap(lambda hh: _expert_ffn(params, hh))(h)      # (G,E,C,d)
+    out = jnp.einsum("gsec,gecd->gsd", comb, out_e)
+    return out, aux
+
+
+def _moe_gather(params, xg, m):
+    """Index-based dispatch: argsort tokens by expert, fixed-capacity buffers.
+
+    FLOPs: only the expert matmuls (plus O(S k log) sort) — no O(S*E*C*d)
+    dispatch einsum.  Uses gather/scatter-add which GSPMD lowers with the
+    tokens replicated along the model axis (validated in the dry-run).
+    """
+    G, S, d = xg.shape
+    E, k = m.n_experts, m.top_k
+    C = max(1, int(m.capacity_factor * S * k / E))
+    probs, topk_prob, topk_idx, aux = _routing(params, xg, m)
+
+    def per_group(x, idx, w):
+        # x: (S,d); idx,w: (S,k)
+        fi = idx.reshape(-1)                                     # (S*k,)
+        fw = w.reshape(-1)
+        order = jnp.argsort(fi)                                  # stable
+        fi_s, fw_s = fi[order], fw[order]
+        tok_s = order // k                                       # source token
+        # slot within expert = rank within its expert segment
+        seg_start = jnp.searchsorted(fi_s, jnp.arange(E))        # (E,)
+        slot = jnp.arange(S * k) - seg_start[fi_s]
+        keep = slot < C
+        buf_idx = jnp.where(keep, fi_s * C + slot, E * C)        # overflow row
+        buf = jnp.zeros((E * C + 1, d), x.dtype).at[buf_idx].set(x[tok_s])
+        out_e = _expert_ffn(params, buf[:E * C].reshape(E, C, d))
+        flat_out = out_e.reshape(E * C, d)
+        gathered = jnp.where(keep[:, None],
+                             flat_out[jnp.where(keep, buf_idx, 0)], 0.0)
+        y = jnp.zeros((S, d), x.dtype).at[tok_s].add(
+            gathered * fw_s[:, None].astype(x.dtype))
+        return y
+
+    out = jax.vmap(per_group)(xg, topk_idx, topk_prob)
+    return out, aux
+
+
+def moe_ffn(params, x, cfg):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    gs = min(m.group_size, T)
+    # group along batch-row boundaries where possible so the (B@dp, S@model)
+    # sharding survives the reshape (see chunked_xent for the failure mode);
+    # rows are split (S % gs == 0) or batched together (gs % S == 0)
+    if S % gs == 0 or gs % S == 0:
+        pad = 0
+        xg = x.reshape(T // gs, gs, d)
+    else:
+        pad = (-T) % gs
+        xf = x.reshape(T, d)
+        if pad:  # pad to a whole number of groups (dropped after)
+            xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)])
+        xg = xf.reshape((T + pad) // gs, gs, d)
+    from repro.sharding.specs import constrain
+    xg = constrain(xg, "moe_group")
+    if m.dispatch_impl == "gather":
+        out, aux = _moe_gather(params, xg, m)
+    else:
+        out, aux = _moe_gshard(params, xg, m)
+    if pad == 0:
+        return out.reshape(B, S, d), aux
+    out = out.reshape(T + pad, d)[:T]
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,331 @@
+"""State-space / recurrent sequence mixers: Mamba-style SSD and xLSTM blocks.
+
+TPU adaptation note (see DESIGN.md §2): the original Mamba selective scan is a
+length-S sequential recurrence designed around GPU shared-memory kernels.  On
+TPU we use the *chunked SSD form* (Mamba-2 style): the sequence is split into
+chunks of length L; within a chunk the recurrence is evaluated as dense
+(L x L)-masked matmuls (MXU-friendly), and a single lax.scan over S/L chunks
+carries the inter-chunk state.  The mLSTM uses the same machinery (it is a
+gated linear-attention recurrence); the sLSTM is inherently sequential
+(hidden-state mixing) and uses a plain lax.scan over time — it only appears in
+xlstm-125m where S/step cost is small.
+
+All mixers expose:
+  *_init(key, cfg) -> params
+  *_apply(params, x, cfg) -> y                       (training / prefill)
+  *_step(params, x_t, state, cfg) -> (y_t, state)    (decode)
+  *_init_state(cfg, batch, dtype) -> state
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# Chunked scalar-decay linear recurrence (shared by SSD and mLSTM)
+#
+#   h_t = a_t * h_{t-1} + k_t (outer) v_t        h: (N, P)
+#   y_t = q_t @ h_t                              q,k: (N,), v: (P,)
+# with a_t in (0, 1] a scalar per (batch, head, t).
+# ---------------------------------------------------------------------------
+
+def chunked_linear_scan(q, k, v, log_a, h0, chunk: int):
+    """q,k: (B,S,H,N); v: (B,S,H,P); log_a: (B,S,H) (<= 0); h0: (B,H,N,P).
+
+    Returns (y: (B,S,H,P), h_final: (B,H,N,P)).  Pure jnp/lax — this is also
+    the oracle for the ``ssm_scan`` Pallas kernel.
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    nc = S // L
+
+    qf = q.astype(jnp.float32).reshape(B, nc, L, H, N)
+    kf = k.astype(jnp.float32).reshape(B, nc, L, H, N)
+    vf = v.astype(jnp.float32).reshape(B, nc, L, H, P)
+    la = log_a.astype(jnp.float32).reshape(B, nc, L, H)
+
+    @jax.checkpoint
+    def body(h, inp):
+        qc, kc, vc, lac = inp          # (B,L,H,N), ..., (B,L,H)
+        cum = jnp.cumsum(lac, axis=1)  # inclusive cumulative log decay
+        total = cum[:, -1]             # (B,H)
+        # intra-chunk: M[t,s] = (q_t . k_s) * exp(cum_t - cum_s) for s <= t
+        scores = jnp.einsum("bthn,bshn->bhts", qc, kc)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]          # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        M = scores * gate.transpose(0, 3, 1, 2)                  # (B,H,t,s)
+        y_intra = jnp.einsum("bhts,bshp->bthp", M, vc)
+        # inter-chunk: y_t += exp(cum_t) * q_t @ h_prev
+        qdec = qc * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bthn,bhnp->bthp", qdec, h)
+        # next state: h = exp(total) * h + sum_s exp(total - cum_s) k_s v_s^T
+        kdec = kc * jnp.exp(total[:, None] - cum)[..., None]
+        h_new = jnp.exp(total)[..., None, None] * h + \
+            jnp.einsum("bshn,bshp->bhnp", kdec, vc)
+        return h_new, y_intra + y_inter
+
+    inps = (qf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+            vf.transpose(1, 0, 2, 3, 4), la.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(body, h0.astype(jnp.float32), inps)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y.astype(v.dtype), h_final
+
+
+def linear_scan_step(q_t, k_t, v_t, a_t, h):
+    """Single decode step of the same recurrence.  q_t,k_t: (B,H,N);
+    v_t: (B,H,P); a_t: (B,H); h: (B,H,N,P)."""
+    h = a_t[..., None, None] * h + \
+        k_t[..., :, None].astype(jnp.float32) * v_t[..., None, :].astype(jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", q_t.astype(jnp.float32), h)
+    return y.astype(v_t.dtype), h
+
+
+def sequential_linear_scan(q, k, v, log_a, h0):
+    """Step-by-step reference for testing the chunked form."""
+    B, S, H, N = q.shape
+
+    def body(h, t):
+        y, h = linear_scan_step(q[:, t], k[:, t], v[:, t],
+                                jnp.exp(log_a[:, t].astype(jnp.float32)), h)
+        return h, y
+
+    h, ys = jax.lax.scan(body, h0.astype(jnp.float32), jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), h
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style SSD mixer (used by hymba's mamba heads)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg) -> dict:
+    sc = cfg.ssm
+    d = cfg.d_model
+    di = sc.expand * d
+    H = sc.n_heads
+    N = sc.d_state
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "conv": (jax.random.normal(ks[1], (sc.d_conv, di), jnp.float32)
+                 * (1.0 / np.sqrt(sc.d_conv))).astype(dtype),
+        "bc_proj": layers.dense_init(ks[2], di, 2 * N, dtype),
+        "dt_proj": layers.dense_init(ks[3], di, H, dtype, bias=True),
+        "out_proj": layers.dense_init(ks[4], di, d, dtype),
+        # A < 0 per head; D skip per head
+        "log_neg_a": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+    }
+    return p
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B,S,di); w: (K,di).
+    If state (B,K-1,di) is given, runs in streaming mode and returns
+    (y, new_state); else pads with zeros."""
+    K = w.shape[0]
+    if state is not None:
+        xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xx[:, -(K - 1):] if K > 1 else state
+    else:
+        xx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    y = sum(xx[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return y, new_state
+
+
+def _mamba_qkva(params, x, cfg):
+    """Shared projection logic.  x: (B,S,d) -> q,k,v,log_a,z and di pieces."""
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    H, N = sc.n_heads, sc.d_state
+    P = di // H
+    u = layers.dense(params["in_proj"], x)
+    xs, z = jnp.split(u, 2, axis=-1)
+    return xs, z, (H, N, P)
+
+
+def mamba_apply(params, x, cfg, conv_state=None, h0=None):
+    """x: (B,S,d) -> (y, (conv_state, h_final))."""
+    sc = cfg.ssm
+    B, S, _ = x.shape
+    xs, z, (H, N, P) = _mamba_qkva(params, x, cfg)
+    xc, new_conv = _causal_conv(xs, params["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    bc = layers.dense(params["bc_proj"], xc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                       # (B,S,N) each
+    dt = jax.nn.softplus(layers.dense(params["dt_proj"], xc).astype(jnp.float32))
+    A = -jnp.exp(params["log_neg_a"])                        # (H,) < 0
+    log_a = dt * A                                           # (B,S,H)
+    v = xc.reshape(B, S, H, P) * dt[..., None].astype(xc.dtype)
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    y, h_final = chunked_linear_scan(q, k, v, log_a, h0, sc.chunk_size)
+    y = y + xc.reshape(B, S, H, P) * params["d_skip"][None, None, :, None].astype(xc.dtype)
+    y = y.reshape(B, S, H * P) * jax.nn.silu(z)
+    return layers.dense(params["out_proj"], y), (new_conv, h_final)
+
+
+def mamba_init_state(cfg, batch: int, dtype):
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    H, N, P = sc.n_heads, sc.d_state, di // sc.n_heads
+    return {
+        "conv": jnp.zeros((batch, sc.d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_step(params, x_t, state, cfg):
+    """x_t: (B,1,d) decode step -> (y_t (B,1,d), new state)."""
+    y, (conv, h) = mamba_apply(params, x_t, cfg,
+                               conv_state=state["conv"], h0=state["h"])
+    return y, {"conv": conv, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunked) and sLSTM (sequential) blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg) -> dict:
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di = xc.mlstm_expand * d
+    H = cfg.n_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "wq": layers.dense_init(ks[1], di, di, dtype),
+        "wk": layers.dense_init(ks[2], di, di, dtype),
+        "wv": layers.dense_init(ks[3], di, di, dtype),
+        "wi": layers.dense_init(ks[4], di, H, dtype, bias=True),
+        "wf": layers.dense_init(ks[5], di, H, dtype, bias=True),
+        "down": layers.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_core(params, xs, cfg, h0):
+    """xs: (B,S,di).  Returns (y (B,S,di), h_final)."""
+    xc = cfg.xlstm
+    B, S, di = xs.shape
+    H = cfg.n_heads
+    P = di // H
+    q = layers.dense(params["wq"], xs).reshape(B, S, H, P)
+    k = layers.dense(params["wk"], xs).reshape(B, S, H, P) / np.sqrt(P)
+    v = layers.dense(params["wv"], xs).reshape(B, S, H, P)
+    # exponential-family gates kept in (0,1) via log-sigmoid for stability
+    log_f = jax.nn.log_sigmoid(
+        layers.dense(params["wf"], xs).astype(jnp.float32))      # (B,S,H)
+    i_gate = jnp.exp(jax.nn.log_sigmoid(
+        layers.dense(params["wi"], xs).astype(jnp.float32)))
+    kg = k * i_gate[..., None].astype(k.dtype)
+    # append a ones-channel to v to carry the normaliser n_t
+    v1 = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y1, h_final = chunked_linear_scan(q, kg, v1, log_f, h0, xc.chunk_size)
+    y, n = y1[..., :P], y1[..., P:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0).astype(y.dtype)
+    return y.reshape(B, S, di), h_final
+
+
+def mlstm_apply(params, x, cfg, h0=None):
+    xc = cfg.xlstm
+    B, S, d = x.shape
+    di = xc.mlstm_expand * d
+    H, P = cfg.n_heads, di // cfg.n_heads
+    u = layers.dense(params["up"], x)
+    xs, z = jnp.split(u, 2, axis=-1)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, P + 1), jnp.float32)
+    y, h_final = _mlstm_core(params, xs, cfg, h0)
+    y = y * jax.nn.silu(z)
+    return layers.dense(params["down"], y), h_final
+
+
+def mlstm_init_state(cfg, batch: int, dtype):
+    xc = cfg.xlstm
+    di = xc.mlstm_expand * cfg.d_model
+    H, P = cfg.n_heads, di // cfg.n_heads
+    return {"h": jnp.zeros((batch, H, P, P + 1), jnp.float32)}
+
+
+def mlstm_step(params, x_t, state, cfg):
+    y, h = mlstm_apply(params, x_t, cfg, h0=state["h"])
+    return y, {"h": h}
+
+
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        # 4 gates (i, f, z, o) from input and recurrent hidden state
+        "wx": layers.dense_init(ks[0], d, 4 * d, dtype, bias=True),
+        "wh": layers.dense_init(ks[1], d, 4 * d, dtype),
+        "out": layers.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_init_state(cfg, batch: int, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def _slstm_cell(params, x_t, st):
+    """x_t: (B,d).  Stabilised exponential-gating sLSTM cell."""
+    gates = (layers.dense(params["wx"], x_t).astype(jnp.float32) +
+             st["h"] @ params["wh"]["w"].astype(jnp.float32))
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + st["m"], gi)                 # stabiliser
+    i_p = jnp.exp(gi - m_new)
+    f_p = jnp.exp(log_f + st["m"] - m_new)
+    c = f_p * st["c"] + i_p * jnp.tanh(gz)
+    n = f_p * st["n"] + i_p
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(params, x, cfg, state=None):
+    """Chunked-remat BPTT: the step scan is wrapped in jax.checkpoint per
+    time-chunk, so the backward pass stores only per-chunk carries instead
+    of per-step gates — S/chunk × less activation memory for one extra
+    forward (§Perf iteration 2: 4096-step xlstm BPTT was the memory-bound
+    worst cell of the roofline table)."""
+    B, S, d = x.shape
+    st = state or slstm_init_state(cfg, B, x.dtype)
+    Tc = (cfg.xlstm.chunk_size if cfg.xlstm else 256)
+    if S % Tc or S <= Tc:
+        Tc = S
+    nc = S // Tc
+
+    def step(st, x_t):
+        st = _slstm_cell(params, x_t, st)
+        return st, st["h"]
+
+    @jax.checkpoint
+    def chunk(st, xc):                       # xc: (Tc, B, d)
+        return jax.lax.scan(step, st, xc)
+
+    xs = x.transpose(1, 0, 2).reshape(nc, Tc, B, d)
+    st, hs = jax.lax.scan(chunk, st, xs)
+    y = hs.reshape(S, B, d).transpose(1, 0, 2).astype(x.dtype)
+    return layers.dense(params["out"], y), st
+
+
+def slstm_step(params, x_t, state, cfg):
+    """x_t: (B,1,d)."""
+    st = _slstm_cell(params, x_t[:, 0], state)
+    y = layers.dense(params["out"], st["h"].astype(x_t.dtype))
+    return y[:, None], st

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adamw, fedadam, fedavgm, fedyogi, sgd,
+                                    ServerOptimizer)
+
+__all__ = ["adamw", "fedadam", "fedavgm", "fedyogi", "sgd", "ServerOptimizer"]

@@ -1,0 +1,126 @@
+"""Optimizers: client-side SGD(+momentum)/AdamW and server-side federated
+optimizers (Reddi et al., 2021 — FedAvgM / FedAdam / FedYogi).
+
+Functional style: ``init(params) -> state``; ``update(grads, state, params)
+-> (updates, state)``; apply with ``apply_updates``.  Server optimizers treat
+the aggregated client delta as a pseudo-gradient.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Any]
+    update: Callable[[Pytree, Any, Pytree], Tuple[Pytree, Any]]
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)),
+                new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+        upd = jax.tree.map(
+            lambda mh, vh, p: -lr * (mh / (jnp.sqrt(vh) + eps)
+                                     + weight_decay * p.astype(jnp.float32)),
+            mh, vh, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# server optimizers (pseudo-gradient = aggregated delta)
+# ---------------------------------------------------------------------------
+
+class ServerOptimizer:
+    """Wraps an Optimizer so FL server updates are ``params ⊕ opt(-delta)``
+    (delta is a descent *step*, so the pseudo-gradient is its negation)."""
+
+    def __init__(self, opt: Optimizer):
+        self.opt = opt
+        self.state = None
+
+    def init(self, params):
+        self.state = self.opt.init(params)
+        return self.state
+
+    def step(self, params, delta):
+        pseudo_grad = jax.tree.map(lambda d: -d, delta)
+        upd, self.state = self.opt.update(pseudo_grad, self.state, params)
+        return apply_updates(params, upd)
+
+
+def fedavgm(lr: float = 1.0, momentum: float = 0.9) -> ServerOptimizer:
+    return ServerOptimizer(sgd(lr, momentum=momentum))
+
+
+def fedadam(lr: float = 0.01, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> ServerOptimizer:
+    return ServerOptimizer(adamw(lr, b1, b2, eps))
+
+
+def fedyogi(lr: float = 0.01, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> ServerOptimizer:
+    base = adamw(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        # yogi: v grows only toward g^2 (sign-controlled)
+        v = jax.tree.map(
+            lambda v, g: v - (1 - b2) * jnp.square(g.astype(jnp.float32))
+            * jnp.sign(v - jnp.square(g.astype(jnp.float32))),
+            state["v"], grads)
+        upd = jax.tree.map(lambda m, v: -lr * m / (jnp.sqrt(jnp.abs(v)) + eps),
+                           m, v)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return ServerOptimizer(Optimizer(base.init, update))

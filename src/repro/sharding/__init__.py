@@ -1,0 +1,7 @@
+from repro.sharding.specs import (batch_spec, cache_spec, caches_shardings,
+                                  constrain, dp_axes, enable_activation_policy,
+                                  param_spec, params_shardings)
+
+__all__ = ["batch_spec", "cache_spec", "caches_shardings", "constrain",
+           "dp_axes", "enable_activation_policy", "param_spec",
+           "params_shardings"]

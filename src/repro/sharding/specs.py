@@ -1,0 +1,376 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Strategy (DESIGN.md §5): FSDP×TP 2-D sharding.
+- Every large weight shards its biggest eligible dim over the data-parallel
+  axes (``("pod","data")`` multi-pod, ``("data",)`` single-pod — ZeRO-3
+  style, XLA inserts the all-gathers) and a second dim over ``"model"``
+  (Megatron TP).
+- Rules are *name-aware* where structure matters (embeddings, attention,
+  MoE experts, KV caches) and fall back to a size heuristic for anything
+  else, so new substrates inherit a sane sharding without edits here.
+- Stacked-layer params (leading ``n_rep`` dim from scan-over-layers) get
+  ``None`` for the layer dim automatically.
+
+All functions return ``PartitionSpec``; callers wrap in ``NamedSharding``
+with the production mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh, axes) -> int:
+    n = 1
+    for a in ([axes] if isinstance(axes, str) else axes):
+        n *= mesh.shape[a]
+    return n
+
+
+def _divisible(dim: int, n: int) -> bool:
+    return dim > 0 and dim % n == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def param_spec(path, shape: Tuple[int, ...], mesh,
+               stacked: bool = True, tied_embeddings: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``stacked``: model params carry a leading layer dim (scan-over-layers);
+    it is detected per-leaf by name (block params live under 'blocks').
+    ``tied_embeddings``: the embedding doubles as the LM head, so it gets the
+    Megatron vocab-parallel layout (V over model, d over dp) — otherwise the
+    tied head matmul contracts a model-sharded d and all-reduces full logits
+    every xent chunk (observed: 2×8e10 B/device on qwen2-0.5b train_4k).
+    """
+    name = _path_str(path)
+    dp = dp_axes(mesh)
+    ndp = axis_size(mesh, dp)
+    ntp = mesh.shape["model"]
+    is_stacked = stacked and "blocks" in name
+    dims = list(shape[1:]) if is_stacked else list(shape)
+    off = 1 if is_stacked else 0
+
+    spec: list = [None] * len(shape)
+
+    def assign(local_idx: int, axes) -> None:
+        spec[local_idx + off] = axes
+
+    small = int(np.prod(dims)) <= 4096 if dims else True
+
+    if not dims or small:
+        pass                                            # replicate
+    elif len(dims) == 1:
+        if _divisible(dims[0], ntp) and dims[0] >= 8192:
+            assign(0, "model")
+    else:
+        # name-aware fast paths ------------------------------------------
+        lowered = name.lower()
+        handled = True
+        if re.search(r"embed/w$", lowered) and len(dims) == 2:
+            if tied_embeddings:
+                # vocab-parallel: V over model, d over dp
+                if _divisible(dims[0], ntp):
+                    assign(0, "model")
+                if _divisible(dims[1], ndp):
+                    assign(1, dp)
+            else:
+                # (V, d): vocab over dp (ZeRO), d over model
+                if _divisible(dims[0], ndp):
+                    assign(0, dp)
+                if _divisible(dims[1], ntp):
+                    assign(1, "model")
+        elif re.search(r"lm_head/w$", lowered) and len(dims) == 2:
+            # (d, V): d over dp, vocab over model (column-parallel head)
+            if _divisible(dims[0], ndp):
+                assign(0, dp)
+            if _divisible(dims[1], ntp):
+                assign(1, "model")
+        elif re.search(r"attn/(wq|wk|wv)/(w|b)$", lowered):
+            # (d, Hn, hd) / bias (Hn, hd): heads over model when divisible
+            # (classic TP); otherwise replicate over model and the activation
+            # policy falls back to sequence-TP.  d over dp (ZeRO).
+            h_dim = len(dims) - 2
+            if _divisible(dims[h_dim], ntp):
+                assign(h_dim, "model")
+            if len(dims) == 3 and _divisible(dims[0], ndp):
+                assign(0, dp)
+        elif re.search(r"attn/wo/w$", lowered) and len(dims) == 3:
+            # (H, hd, d): heads over model (row-parallel), d over dp
+            if _divisible(dims[0], ntp):
+                assign(0, "model")
+            if _divisible(dims[2], ndp):
+                assign(2, dp)
+        elif re.search(r"ffn/(wi|wg)/?w?$", lowered) and len(dims) == 3:
+            # MoE experts (E, d, f): d over dp (ZeRO storage), f over model;
+            # the use-site gathers d explicitly (constrain "moe_weight") so
+            # the backward reduce-scatters weight grads instead of
+            # all-reducing (G,E,C,d) activation buffers (§Perf iteration 3)
+            if _divisible(dims[1], ndp):
+                assign(1, dp)
+            if _divisible(dims[2], ntp):
+                assign(2, "model")
+        elif re.search(r"ffn/wo/?w?$", lowered) and len(dims) == 3:
+            # MoE experts (E, f, d): f over model (row-parallel: matches the
+            # act's f@model), d over dp (ZeRO)
+            if _divisible(dims[1], ntp):
+                assign(1, "model")
+            if _divisible(dims[2], ndp):
+                assign(2, dp)
+        elif len(dims) == 2 and re.search(
+                r"/(wo|down|out_proj|out)/w$", lowered):
+            # second matmul of a block (row-parallel): in-dim over model
+            if _divisible(dims[0], ntp):
+                assign(0, "model")
+            if _divisible(dims[1], ndp):
+                assign(1, dp)
+        elif len(dims) == 2:
+            # first matmul (column-parallel): in over dp, out over model
+            if _divisible(dims[0], ndp):
+                assign(0, dp)
+            if _divisible(dims[1], ntp):
+                assign(1, "model")
+        else:
+            handled = False
+        if not handled:
+            # generic heuristic: biggest divisible dim -> dp, next -> tp
+            order = sorted(range(len(dims)), key=lambda i: -dims[i])
+            dp_dim = next((i for i in order if _divisible(dims[i], ndp)), None)
+            if dp_dim is not None:
+                assign(dp_dim, dp)
+            tp_dim = next((i for i in order
+                           if i != dp_dim and _divisible(dims[i], ntp)), None)
+            if tp_dim is not None:
+                assign(tp_dim, "model")
+    return P(*spec)
+
+
+def params_shardings(params_shape_tree, mesh):
+    """NamedSharding tree matching a params ShapeDtypeStruct tree."""
+    from jax.sharding import NamedSharding
+
+    tied = isinstance(params_shape_tree, dict) and \
+        "lm_head" not in params_shape_tree
+
+    def leaf(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(path, leaf.shape, mesh, tied_embeddings=tied))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(shape: Tuple[int, ...], mesh, seq_axis: Optional[int] = None) -> P:
+    """Inputs/labels (B, S[, d]): batch over dp; if batch=1 (long-context)
+    shard the sequence dim over dp instead (sequence parallelism)."""
+    dp = dp_axes(mesh)
+    ndp = axis_size(mesh, dp)
+    spec: list = [None] * len(shape)
+    if _divisible(shape[0], ndp):
+        spec[0] = dp
+    elif len(shape) > 1 and seq_axis is not None \
+            and _divisible(shape[seq_axis], ndp):
+        spec[seq_axis] = dp
+    return P(*spec)
+
+
+def cache_spec(path, shape: Tuple[int, ...], mesh) -> P:
+    """KV-cache / decode-state leaves (stacked: leading n_rep dim).
+
+    k/v: (L, B, Smax, KV, hd) — batch over dp; kv-heads over model when
+    divisible, else head_dim, else Smax.  pos: replicated.  SSM states
+    (L, B, H, N, P): batch over dp, heads/P over model.
+    """
+    name = _path_str(path)
+    dp = dp_axes(mesh)
+    ndp = axis_size(mesh, dp)
+    ntp = mesh.shape["model"]
+    spec: list = [None] * len(shape)
+    if name.endswith("pos") or len(shape) < 3:
+        return P(*spec)
+    # dims[0] = layer stack; dims[1] = batch
+    if _divisible(shape[1], ndp):
+        spec[1] = dp
+    if re.search(r"attn/(k|v)$", name) and len(shape) == 5:
+        # (L, B, Smax, KV, hd): prefer kv-heads over model (no comm on the
+        # score einsum); else the ring-buffer seq dim (sharded cache, softmax
+        # stats reduced over model); else head_dim (contraction all-reduce).
+        for i in (3, 2, 4):
+            if _divisible(shape[i], ntp) and shape[i] >= ntp:
+                spec[i] = "model"
+                break
+    else:
+        # SSM/conv decode states: model axis on the largest divisible
+        # trailing dim
+        for i in range(len(shape) - 1, 1, -1):
+            if spec[i] is None and _divisible(shape[i], ntp) and shape[i] >= ntp:
+                spec[i] = "model"
+                break
+    if all(s is None for s in spec[1:]) and _divisible(shape[2], ndp):
+        spec[2] = dp   # batch=1 long-context: shard the ring buffer seq dim
+    return P(*spec)
+
+
+def caches_shardings(cache_shape_tree, mesh):
+    from jax.sharding import NamedSharding
+
+    def leaf(path, leaf):
+        return NamedSharding(mesh, cache_spec(path, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape_tree)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (enabled only under a mesh; the model code
+# calls ``constrain(x, kind)`` and it is a no-op in tests / CPU runs)
+# ---------------------------------------------------------------------------
+
+_ACTIVE_POLICY: Optional["ActivationPolicy"] = None
+
+
+class ActivationPolicy:
+    """Decides activation PartitionSpecs per tensor kind.
+
+    kinds:
+      residual — (B, S, d): batch over dp (seq over dp when B=1)
+      heads    — (B, S, Hn, hd): batch over dp; heads over model when
+                 divisible, else *sequence-TP* (S over model) — the fallback
+                 for archs whose head counts don't divide the model axis
+                 (qwen2's 14 heads, hymba's 25, on a 16-wide model axis).
+      tokens   — (T, ...) flattened token-major tensors: T over dp
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.dp = dp_axes(mesh)
+        self.ndp = axis_size(mesh, self.dp)
+        self.ntp = mesh.shape["model"]
+
+    KINDS = ("residual", "heads", "tokens", "loss_chunk", "moe_group")
+
+    def spec(self, kind: str, shape: Tuple[int, ...]) -> Optional[P]:
+        dp, ndp, ntp = self.dp, self.ndp, self.ntp
+        s: list = [None] * len(shape)
+        if kind == "residual" and len(shape) == 3:
+            if _divisible(shape[0], ndp):
+                s[0] = dp
+            elif _divisible(shape[1], ndp):
+                s[1] = dp
+            # Megatron-style sequence parallelism: the residual stream (and
+            # therefore every remat-boundary save) also shards its seq dim
+            # over "model"; attention/collectives re-gather per layer.
+            if s[1] is None and shape[1] > 1 and _divisible(shape[1], ntp):
+                s[1] = "model"
+            return P(*s)
+        if kind == "heads" and len(shape) == 4:
+            if _divisible(shape[0], ndp):
+                s[0] = dp
+            elif _divisible(shape[1], ndp):
+                s[1] = dp
+            if _divisible(shape[2], ntp):
+                s[2] = "model"
+            elif s[1] is None and _divisible(shape[1], ntp) and shape[1] > 1:
+                s[1] = "model"          # sequence-TP fallback
+            return P(*s)
+        if kind == "kv_heads" and len(shape) == 4:
+            # GQA k/v when q runs head-TP: batch over dp, REPLICATED over
+            # model (kv-heads rarely divide it; repeat_kv re-shards to the
+            # q heads locally).  A seq-TP fallback here would force a
+            # reshard copy per layer ("involuntary full remat" warnings).
+            if _divisible(shape[0], ndp):
+                s[0] = dp
+            if _divisible(shape[2], ntp):
+                s[2] = "model"
+            return P(*s)
+        if kind == "tokens" and len(shape) >= 2:
+            if _divisible(shape[0], ndp):
+                s[0] = dp
+            return P(*s)
+        if kind == "loss_chunk" and len(shape) == 3:
+            # (B, Sc, d): batch over dp, seq/d replicated (pre-head gather)
+            if _divisible(shape[0], ndp):
+                s[0] = dp
+            return P(*s)
+        if kind == "moe_weight" and len(shape) == 3:
+            # explicit ZeRO gather point: (E, d, f) replicated over dp,
+            # f stays on model
+            if _divisible(shape[2], ntp):
+                s[2] = "model"
+            return P(*s)
+        if kind == "moe_weight_row" and len(shape) == 3:
+            # (E, f, d): f on model, d replicated (gathered over dp)
+            if _divisible(shape[1], ntp):
+                s[1] = "model"
+            return P(*s)
+        if kind == "moe_group" and len(shape) == 3:
+            # (G, gs, d): groups over dp, tokens/d replicated
+            if _divisible(shape[0], ndp):
+                s[0] = dp
+            return P(*s)
+        return None
+
+
+def head_tp_active(H: int) -> bool:
+    """True when the activation policy will shard H heads over model."""
+    pol = _ACTIVE_POLICY
+    return pol is not None and H % pol.ntp == 0
+
+
+def tp_padded_heads(H: int, KV: int) -> int:
+    """Head count padded up to the model-axis multiple, when profitable.
+
+    Zero-padded query heads make head-TP available to archs whose H doesn't
+    divide the model axis (qwen2's 14, llama3.2's 24, qwen2.5's 40 on a
+    16-wide axis) — exact math (padded wo rows are zero), ≤50% extra
+    attention FLOPs, and it replaces the seq-TP fallback whose backward
+    all-reduces dk/dv per chunk per layer (§Perf iteration 1).
+    Constraints: padded H must stay a multiple of KV (GQA groups) and the
+    overhead is capped at 1.5x.
+    """
+    pol = _ACTIVE_POLICY
+    if pol is None or H % pol.ntp == 0:
+        return H
+    Hp = -(-H // pol.ntp) * pol.ntp
+    if KV > 0 and Hp % KV != 0:
+        return H
+    if Hp > 1.5 * H:
+        return H
+    return Hp
+
+
+def enable_activation_policy(mesh) -> None:
+    global _ACTIVE_POLICY
+    _ACTIVE_POLICY = ActivationPolicy(mesh) if mesh is not None else None
+
+
+def constrain(x, kind: str):
+    """Apply an activation sharding constraint when a policy is active."""
+    pol = _ACTIVE_POLICY
+    if pol is None:
+        return x
+    spec = pol.spec(kind, x.shape)
+    if spec is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec))

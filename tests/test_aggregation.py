@@ -1,0 +1,96 @@
+"""Hierarchical aggregation (§4.2): exactness, OP registry, COLLECT, and the
+kernel-backed fold path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
+                                    flat_aggregate, global_aggregate,
+                                    payload_bytes)
+
+
+def _results(n, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        out.append(ClientResult(
+            payload={
+                "delta": {"w": jnp.asarray(rng.normal(size=(5, 3)),
+                                           jnp.float32)},
+                "tau": jnp.float32(rng.integers(1, 9)),
+                "count": jnp.ones((), jnp.float32),
+                "trace": jnp.asarray(rng.normal(size=(2,)), jnp.float32),
+            },
+            ops={"delta": Op.WEIGHTED_AVG, "tau": Op.AVG, "count": Op.SUM,
+                 "trace": Op.COLLECT},
+            weight=float(rng.integers(5, 200))))
+    return out
+
+
+OPS = {"delta": Op.WEIGHTED_AVG, "tau": Op.AVG, "count": Op.SUM,
+       "trace": Op.COLLECT}
+
+
+@pytest.mark.parametrize("K", [1, 2, 5])
+def test_hierarchical_equals_flat_any_split(K):
+    results = _results(11)
+    flat = flat_aggregate(results, OPS)
+    aggs = [LocalAggregator(OPS) for _ in range(K)]
+    for i, r in enumerate(results):
+        aggs[i % K].fold(r)
+    hier = global_aggregate([a.partial() for a in aggs], OPS)
+    np.testing.assert_allclose(np.asarray(flat["delta"]["w"]),
+                               np.asarray(hier["delta"]["w"]), rtol=1e-6)
+    np.testing.assert_allclose(float(flat["tau"]), float(hier["tau"]),
+                               rtol=1e-6)
+    assert float(hier["count"]) == len(results)
+    assert len(hier["trace"]) == len(results)
+
+
+def test_weighted_avg_is_weight_correct():
+    r1 = ClientResult({"d": jnp.asarray([1.0])}, {"d": Op.WEIGHTED_AVG}, 1.0)
+    r2 = ClientResult({"d": jnp.asarray([4.0])}, {"d": Op.WEIGHTED_AVG}, 3.0)
+    out = flat_aggregate([r1, r2], {"d": Op.WEIGHTED_AVG})
+    assert float(out["d"][0]) == pytest.approx((1 + 12) / 4)
+
+
+def test_collect_preserves_order_and_weights():
+    results = _results(6)
+    flat = flat_aggregate(results, OPS)
+    ws = [w for w, _ in flat["trace"]]
+    assert ws == [r.weight for r in results]
+
+
+def test_local_aggregator_memory_is_O_sa():
+    """The partial's size must not grow with the number of folded clients
+    (the paper's sequential-training memory claim)."""
+    agg = LocalAggregator({"delta": Op.WEIGHTED_AVG})
+    sizes = []
+    for i, r in enumerate(_results(20)):
+        agg.fold(ClientResult({"delta": r.payload["delta"]},
+                              {"delta": Op.WEIGHTED_AVG}, r.weight))
+        sizes.append(payload_bytes(agg.partial()["sums"]))
+    assert len(set(sizes)) == 1
+
+
+def test_kernel_backed_fold_matches_plain():
+    results = _results(7, seed=3)
+    ops = {"delta": Op.WEIGHTED_AVG}
+    plain = LocalAggregator(ops, use_kernel=False)
+    kern = LocalAggregator(ops, use_kernel=True)
+    for r in results:
+        slim = ClientResult({"delta": r.payload["delta"]}, ops, r.weight)
+        plain.fold(slim)
+        kern.fold(slim)
+    a = global_aggregate([plain.partial()], ops)
+    b = global_aggregate([kern.partial()], ops)
+    np.testing.assert_allclose(np.asarray(a["delta"]["w"]),
+                               np.asarray(b["delta"]["w"]), atol=1e-5)
+
+
+def test_sum_op_ignores_weights():
+    r1 = ClientResult({"c": jnp.asarray([2.0])}, {"c": Op.SUM}, 100.0)
+    r2 = ClientResult({"c": jnp.asarray([3.0])}, {"c": Op.SUM}, 1.0)
+    out = flat_aggregate([r1, r2], {"c": Op.SUM})
+    assert float(out["c"][0]) == 5.0

@@ -1,0 +1,120 @@
+"""Data partitioners, synthetic datasets, optimizers, compression units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (dirichlet_label_partition, make_classification_clients,
+                        make_lm_clients, partition_sizes)
+from repro.optim.optimizers import (adamw, apply_updates, fedadam, fedavgm,
+                                    fedyogi, sgd)
+
+
+def test_natural_sizes_heterogeneous():
+    sizes = partition_sizes("natural", 500, seed=0)
+    assert sizes.min() >= 4
+    assert sizes.max() / np.median(sizes) > 3    # long tail
+
+
+def test_quantity_skew_heavier_than_natural():
+    nat = partition_sizes("natural", 2000, seed=0)
+    qs = partition_sizes("quantity_skew", 2000, 5.0, seed=0)
+    assert (qs.max() / np.median(qs)) > (nat.max() / np.median(nat))
+
+
+def test_dirichlet_label_partition_covers_all_examples():
+    labels = np.random.default_rng(0).integers(0, 10, size=5000)
+    parts = dirichlet_label_partition(labels, 20, alpha=0.1, seed=0)
+    got = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(got, np.arange(5000))
+
+
+def test_dirichlet_is_label_skewed():
+    labels = np.random.default_rng(0).integers(0, 10, size=20000)
+    parts = dirichlet_label_partition(labels, 20, alpha=0.05, seed=0)
+    # a strongly skewed client should be dominated by few classes
+    fracs = []
+    for p in parts:
+        if len(p) < 50:
+            continue
+        counts = np.bincount(labels[p], minlength=10)
+        fracs.append(counts.max() / counts.sum())
+    assert np.median(fracs) > 0.5
+
+
+def test_classification_clients_fixed_batch_shapes():
+    data = make_classification_clients(10, dim=8, n_classes=4, batch_size=16,
+                                       seed=0)
+    for cd in data.values():
+        for b in cd.batches:
+            assert b["x"].shape == (16, 8)
+            assert b["y"].shape == (16,)
+
+
+def test_lm_clients_shapes():
+    data = make_lm_clients(5, vocab=128, seq_len=32, batch_size=4, seed=0)
+    for cd in data.values():
+        for b in cd.batches:
+            assert b["inputs"].shape == (4, 32)
+            assert b["labels"].shape == (4, 32)
+            assert b["inputs"].max() < 128
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_min(opt, steps=200):
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(steps):
+        grads = {"x": 2 * params["x"]}       # d/dx ||x||^2
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    return float(jnp.max(jnp.abs(params["x"])))
+
+
+def test_sgd_converges_on_quadratic():
+    assert _quad_min(sgd(0.1)) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _quad_min(sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges():
+    assert _quad_min(adamw(0.1), steps=400) < 1e-2
+
+
+@pytest.mark.parametrize("factory", [fedavgm, fedadam, fedyogi])
+def test_server_optimizers_step_toward_delta(factory):
+    srv = factory()
+    params = {"x": jnp.zeros((4,))}
+    srv.init(params)
+    delta = {"x": jnp.ones((4,))}
+    out = srv.step(params, delta)
+    assert float(jnp.min(out["x"])) > 0      # moved in the delta direction
+
+
+# ---------------------------------------------------------------------------
+# compression units
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    from repro.core.compression import Int8Compressor
+    comp = Int8Compressor()
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(1000,)).astype(np.float32)
+    c = comp._compress_array(a)
+    b = comp._decompress_array(c)
+    assert np.abs(a - b).max() <= np.abs(a).max() / 127.0 + 1e-6
+    assert c.nbytes < a.nbytes / 3.5         # ~4x compression
+
+
+def test_topk_wire_size():
+    from repro.core.compression import TopKCompressor
+    comp = TopKCompressor(fraction=0.01)
+    a = np.random.default_rng(0).normal(size=(10000,)).astype(np.float32)
+    c = comp._compress_array(a, "k")
+    assert len(c.data["vals"]) == 100
+    assert c.nbytes < a.nbytes / 10

@@ -1,0 +1,69 @@
+"""Unit tests for the trip-count-aware HLO parser (launch/hlo_analysis.py)
+on hand-written HLO snippets with known answers."""
+from repro.launch.hlo_analysis import Module, collective_stats, compute_stats
+
+HLO = """\
+HloModule jit_step, is_scheduled=true
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %c = s32[] constant(12)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (p2: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %x = f32[8,16]{1,0} get-tuple-element(%p2), index=1
+  %w = f32[16,16]{1,0} constant(0)
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={{0,1,2,3}}, to_apply=%add.1
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  ROOT %t = (s32[], f32[8,16]) tuple(%i2, %ar)
+}
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %i0 = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%i0, %arg)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[32,16]{1,0} all-gather(%arg), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_trip_count_and_flops():
+    mod = Module(HLO)
+    # dot: 2 * 8*16 * 16 = 4096 flops, x12 trips = 49152
+    assert compute_stats(HLO)["flops_per_device"] == 4096 * 12
+
+
+def test_collectives_trip_aware():
+    stats = collective_stats(HLO)
+    # all-reduce in the loop: 8*16*4 bytes * factor 2 * 12 trips
+    ar = stats["bytes_by_kind"]["all-reduce"]
+    assert ar == 8 * 16 * 4 * 2 * 12
+    # all-gather outside: 32*16*4 bytes * 1
+    ag = stats["bytes_by_kind"]["all-gather"]
+    assert ag == 32 * 16 * 4
+    assert stats["count_by_kind"]["all-reduce"] == 12
+    assert stats["count_by_kind"]["all-gather"] == 1
+
+
+def test_multipliers_nested():
+    mod = Module(HLO)
+    assert mod.mult["body.1"] == 12
+    assert mod.mult["main"] == 1
+
+
+def test_comment_stripping():
+    hlo = HLO.replace("(s32[], f32[8,16])",
+                      "(s32[], /*index=1*/f32[8,16])")
+    assert compute_stats(hlo)["flops_per_device"] == 4096 * 12

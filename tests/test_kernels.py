@@ -1,0 +1,159 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret=True on CPU — the kernel body itself executes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hd", [(2, 256, 4, 64), (1, 128, 2, 128),
+                                      (2, 256, 3, 96), (1, 512, 1, 192)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, H, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (1, 256, 2, 64)) for kk in ks)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("blk", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(blk):
+    """Block-shape sweep: tiling must not change the math."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (jax.random.normal(kk, (1, 256, 2, 64)) for kk in ks)
+    out = ops.flash_attention(q, k, v, causal=True, blk_q=blk[0], blk_k=blk[1])
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=1e-3)
+
+
+def test_flash_matches_model_chunked_attention():
+    """Kernel == the model's chunked-jnp path (same algorithm, two impls)."""
+    from repro.models.attention import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (jax.random.normal(kk, (2, 256, 4, 64)) for kk in ks)
+    a = ops.flash_attention(q, k, v, causal=True)
+    b = chunked_attention(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# aggregation fold
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1000, 65536, 100001])
+@pytest.mark.parametrize("C", [1, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_agg_weighted_sum(n, C, dtype):
+    key = jax.random.PRNGKey(0)
+    acc = jax.random.normal(key, (n,), jnp.float32)
+    deltas = jax.random.normal(jax.random.fold_in(key, 1), (C, n), dtype)
+    w = jnp.linspace(0.5, 2.0, C)
+    out = ops.agg_weighted_sum(acc, deltas, w)
+    exp = ref.agg_weighted_sum_ref(acc, deltas, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_agg_fold_matches_plain():
+    key = jax.random.PRNGKey(1)
+    acc = jnp.zeros((317, 13), jnp.float32)
+    delta = jax.random.normal(key, (317, 13), jnp.bfloat16)
+    out = ops.agg_fold(acc, delta, 2.5)
+    np.testing.assert_allclose(np.asarray(out),
+                               2.5 * np.asarray(delta, np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,chunk", [(256, 64), (256, 128), (512, 256)])
+@pytest.mark.parametrize("N,P", [(16, 32), (8, 64)])
+def test_ssm_scan(S, chunk, N, P):
+    BH = 3
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (BH, S, N))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, N)) * 0.1
+    v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, P))
+    la = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (BH, S)))
+    y, h = ops.ssm_scan(q, k, v, la, chunk=chunk)
+    ye, he = ref.ssm_scan_ref(q, k, v, la, jnp.zeros((BH, N, P)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_ssm_kernel_matches_model_chunked_scan():
+    """Kernel == models.ssm.chunked_linear_scan (shared SSD algorithm)."""
+    from repro.models.ssm import chunked_linear_scan
+    B, S, H, N, P = 2, 256, 2, 8, 16
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (B, S, H, N))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, N)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, P))
+    la = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (B, S, H)))
+    y_model, h_model = chunked_linear_scan(q, k, v, la,
+                                           jnp.zeros((B, H, N, P)), 64)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    laf = la.transpose(0, 2, 1).reshape(B * H, S)
+    y_kern, h_kern = ops.ssm_scan(qf, kf, vf, laf, chunk=64)
+    y_kern = y_kern.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kern),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,d", [(100, 64), (1000, 896), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(T, d, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (T, d), dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,), dtype)
+    out = ops.rmsnorm(x, g)
+    exp = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+def test_rmsnorm_matches_model_layer():
+    from repro.models import layers
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    g = jnp.full((32,), 1.3)
+    np.testing.assert_allclose(
+        np.asarray(ops.rmsnorm(x, g)),
+        np.asarray(layers.rmsnorm({"g": g}, x)), atol=1e-5, rtol=1e-5)

@@ -1,0 +1,142 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
+                                    flat_aggregate, global_aggregate)
+from repro.core.scheduler import ClientTask, ParrotScheduler, makespan
+from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(weights=st.lists(st.floats(1.0, 100.0), min_size=2, max_size=12),
+       K=st.integers(1, 6), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_hierarchical_aggregation_exact_for_any_partition(weights, K, seed):
+    """Σ w x / Σ w is invariant to how clients are split across executors."""
+    rng = np.random.default_rng(seed)
+    ops = {"d": Op.WEIGHTED_AVG}
+    results = [ClientResult({"d": jnp.asarray(rng.normal(size=(4,)),
+                                              jnp.float32)}, ops, w)
+               for w in weights]
+    flat = flat_aggregate(results, ops)
+    aggs = [LocalAggregator(ops) for _ in range(K)]
+    for i, r in enumerate(results):
+        aggs[int(rng.integers(K))].fold(r)
+    hier = global_aggregate([a.partial() for a in aggs if a.n_clients], ops)
+    np.testing.assert_allclose(np.asarray(flat["d"]), np.asarray(hier["d"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(sizes=st.lists(st.integers(1, 1000), min_size=1, max_size=60),
+       K=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_schedule_is_a_partition(sizes, K):
+    """Every task assigned exactly once, no invented tasks."""
+    sched = ParrotScheduler(WorkloadEstimator(), warmup_rounds=0)
+    tasks = [ClientTask(i, n) for i, n in enumerate(sizes)]
+    s = sched.schedule(1, tasks, list(range(K)))
+    got = sorted(t.client for q in s.assignment.values() for t in q)
+    assert got == list(range(len(sizes)))
+
+
+@given(sizes=st.lists(st.integers(1, 500), min_size=4, max_size=40),
+       K=st.integers(2, 6), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_lpt_never_worse_than_round_robin_homogeneous(sizes, K, seed):
+    """With identical executors, LPT's predicted makespan <= round robin's
+    (classic scheduling-theory property of the greedy heuristic)."""
+    models = {k: WorkloadModel(0.01, 0.1) for k in range(K)}
+    est = WorkloadEstimator()
+    rng = np.random.default_rng(seed)
+    for r in range(2):
+        for i, n in enumerate(sizes):
+            k = int(rng.integers(K))
+            est.record(RunRecord(r, i, k, n, models[k].predict(n)))
+    tasks = [ClientTask(i, n) for i, n in enumerate(sizes)]
+    lpt = ParrotScheduler(est, warmup_rounds=0).schedule(
+        3, tasks, list(range(K)))
+    rr = ParrotScheduler(est, warmup_rounds=0, policy="none").schedule(
+        3, tasks, list(range(K)))
+    # LPT guarantees makespan <= (4/3 - 1/3K)·OPT; round robin >= OPT, so
+    # LPT <= 4/3·RR (LPT can lose to RR on adversarial instances, but never
+    # by more than the approximation bound)
+    assert makespan(lpt.assignment, models) <= \
+        makespan(rr.assignment, models) * (4 / 3) + 1e-9
+
+
+@given(n=st.integers(4, 200), frac=st.floats(0.05, 1.0),
+       rounds=st.integers(1, 8), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_topk_error_feedback_conserves_mass(n, frac, rounds, seed):
+    """Error feedback invariant: Σ transmitted + residual == Σ inputs —
+    nothing is ever lost, only delayed (what makes top-k unbiased long-run)."""
+    from repro.core.compression import TopKCompressor
+    rng = np.random.default_rng(seed)
+    comp = TopKCompressor(fraction=frac)
+    transmitted = np.zeros((n,), np.float32)
+    total_in = np.zeros((n,), np.float32)
+    for _ in range(rounds):
+        delta = rng.normal(size=(n,)).astype(np.float32)
+        total_in += delta
+        c = comp._compress_array(delta, "x")
+        transmitted += comp._decompress_array(c)
+    residual = comp._residual["x"]
+    np.testing.assert_allclose(transmitted + residual, total_in,
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(T=st.integers(2, 64), d=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_rmsnorm_output_is_scale_invariant(T, d, seed):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive scale (the invariant that
+    makes it a norm)."""
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(T, d)).astype(np.float32)
+    # invariance is exact only as eps -> 0; keep rows away from zero
+    x += np.sign(x) * 0.5
+    x = jnp.asarray(x)
+    g = jnp.ones((d,), jnp.float32)
+    a = ref.rmsnorm_ref(x, g)
+    b = ref.rmsnorm_ref(3.7 * x, g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@given(S=st.sampled_from([32, 64, 128]), chunk=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_online_softmax_attention_chunk_invariant(S, chunk, seed):
+    from repro.models.attention import chunked_attention, dense_attention
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, S, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, S, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, 2, 8)), jnp.float32)
+    a = dense_attention(q, k, v, causal=True)
+    b = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                               rtol=1e-4)
+
+
+@given(sizes=st.lists(st.integers(1, 400), min_size=3, max_size=30),
+       eta=st.floats(0.0, 4.0))
+@settings(**SETTINGS)
+def test_makespan_lower_bound(sizes, eta):
+    """Predicted makespan >= total work / K (work conservation)."""
+    K = 4
+    models = {k: WorkloadModel(0.01 * (1 + (eta if k == 0 else 0)), 0.0)
+              for k in range(K)}
+    est = WorkloadEstimator()
+    for i, n in enumerate(sizes):
+        for k in range(K):
+            est.record(RunRecord(0, i, k, n, models[k].predict(n)))
+    tasks = [ClientTask(i, n) for i, n in enumerate(sizes)]
+    s = ParrotScheduler(est, warmup_rounds=0).schedule(1, tasks,
+                                                       list(range(K)))
+    ms = makespan(s.assignment, models)
+    fastest = min(m.t_sample for m in models.values())
+    assert ms >= fastest * sum(sizes) / K - 1e-9

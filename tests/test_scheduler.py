@@ -1,0 +1,126 @@
+"""Scheduler (Algorithm 3) and workload-model (Eq. 2) unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import ClientTask, ParrotScheduler, makespan
+from repro.core.workload import (RunRecord, WorkloadEstimator, WorkloadModel)
+
+
+def _tasks(sizes):
+    return [ClientTask(i, int(n)) for i, n in enumerate(sizes)]
+
+
+def _feed(est, models, sizes, rounds=3, seed=0):
+    rng = np.random.default_rng(seed)
+    for r in range(rounds):
+        for i, n in enumerate(sizes):
+            k = int(rng.integers(len(models)))
+            est.record(RunRecord(round=r, client=i, executor=k,
+                                 n_samples=int(n),
+                                 time=models[k].predict(n)))
+
+
+def test_estimator_recovers_linear_model():
+    est = WorkloadEstimator()
+    true = {0: WorkloadModel(0.01, 0.5), 1: WorkloadModel(0.03, 1.0)}
+    rng = np.random.default_rng(0)
+    for r in range(5):
+        for _ in range(10):
+            for k, m in true.items():
+                n = int(rng.integers(10, 500))
+                est.record(RunRecord(r, 0, k, n, m.predict(n)))
+    fit = est.fit(5)
+    for k, m in true.items():
+        assert abs(fit[k].t_sample - m.t_sample) < 1e-6
+        assert abs(fit[k].b - m.b) < 1e-4
+
+
+def test_time_window_discards_stale_history():
+    """Fig. 11: after a speed change, all-history fits are poisoned; a
+    window-limited fit tracks the new regime."""
+    est_all = WorkloadEstimator(time_window=0)
+    est_win = WorkloadEstimator(time_window=2)
+    slow = WorkloadModel(0.05, 1.0)
+    fast = WorkloadModel(0.005, 0.1)
+    rng = np.random.default_rng(1)
+    for r in range(10):
+        m = slow if r < 8 else fast          # regime switch at round 8
+        for _ in range(20):
+            n = int(rng.integers(10, 500))
+            rec = RunRecord(r, 0, 0, n, m.predict(n))
+            est_all.record(rec)
+            est_win.record(rec)
+    fit_all = est_all.fit(10)[0]
+    fit_win = est_win.fit(10)[0]
+    assert abs(fit_win.t_sample - fast.t_sample) < 1e-6
+    assert abs(fit_all.t_sample - fast.t_sample) > 0.005
+
+
+def test_lpt_beats_round_robin_on_skewed_sizes():
+    est = WorkloadEstimator()
+    models = {k: WorkloadModel(0.01, 0.1) for k in range(4)}
+    sizes = [1000, 10, 10, 10, 10, 10, 10, 10, 500, 500]
+    _feed(est, models, sizes)
+    sched = ParrotScheduler(est, warmup_rounds=0)
+    s = sched.schedule(5, _tasks(sizes), list(range(4)))
+    rr = ParrotScheduler(est, warmup_rounds=0, policy="none")
+    s_rr = rr.schedule(5, _tasks(sizes), list(range(4)))
+    assert makespan(s.assignment, models) <= makespan(s_rr.assignment, models)
+
+
+def test_heterogeneous_devices_get_fewer_samples():
+    """Eq. 4: a 4x-slower executor should be assigned ~4x less work."""
+    est = WorkloadEstimator()
+    true = {0: WorkloadModel(0.01, 0.0), 1: WorkloadModel(0.04, 0.0)}
+    rng = np.random.default_rng(2)
+    for r in range(3):
+        for _ in range(30):
+            for k, m in true.items():
+                n = int(rng.integers(10, 300))
+                est.record(RunRecord(r, 0, k, n, m.predict(n)))
+    sched = ParrotScheduler(est, warmup_rounds=0)
+    sizes = [100] * 40
+    s = sched.schedule(3, _tasks(sizes), [0, 1])
+    n0 = sum(t.n_samples for t in s.queue(0))
+    n1 = sum(t.n_samples for t in s.queue(1))
+    assert n0 > 2.5 * n1
+
+
+def test_all_tasks_assigned_exactly_once():
+    est = WorkloadEstimator()
+    sched = ParrotScheduler(est, warmup_rounds=0)
+    sizes = list(range(1, 58))
+    s = sched.schedule(1, _tasks(sizes), list(range(7)))
+    assigned = sorted(t.client for q in s.assignment.values() for t in q)
+    assert assigned == list(range(len(sizes)))
+
+
+def test_warmup_uses_uniform_split():
+    est = WorkloadEstimator()
+    sched = ParrotScheduler(est, warmup_rounds=2)
+    s = sched.schedule(0, _tasks([10] * 12), [0, 1, 2])
+    lens = sorted(len(q) for q in s.assignment.values())
+    assert lens == [4, 4, 4]
+
+
+def test_elastic_membership_changes_K_between_rounds():
+    """The executor set is a per-round argument (elastic scaling)."""
+    est = WorkloadEstimator()
+    sched = ParrotScheduler(est, warmup_rounds=0)
+    s4 = sched.schedule(1, _tasks([10] * 16), [0, 1, 2, 3])
+    s2 = sched.schedule(2, _tasks([10] * 16), [0, 2])   # two died
+    assert set(s4.assignment) == {0, 1, 2, 3}
+    assert set(s2.assignment) == {0, 2}
+    assert sum(len(q) for q in s2.assignment.values()) == 16
+
+
+def test_scheduling_cost_is_linear_in_K_times_Mp():
+    """§4.5: O(K·M_p) — doubling both should ~4x the work, and stay tiny."""
+    import time
+    est = WorkloadEstimator()
+    sched = ParrotScheduler(est, warmup_rounds=0)
+    t0 = time.perf_counter()
+    sched.schedule(1, _tasks(np.random.default_rng(0).integers(
+        1, 1000, size=1000)), list(range(32)))
+    dt = time.perf_counter() - t0
+    assert dt < 1.0   # 1000 clients x 32 executors scheduled in < 1s

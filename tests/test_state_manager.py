@@ -1,0 +1,99 @@
+"""Client state manager (§3.4): tiering, spill, restore, rebalance."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.state_manager import ClientStateManager, owner_host
+
+
+def _state(i, size=100):
+    rng = np.random.default_rng(i)
+    return {"c": rng.normal(size=(size,)).astype(np.float32),
+            "step": np.int32(i)}
+
+
+def test_save_load_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d)
+        for i in range(10):
+            sm.save(i, _state(i))
+        for i in range(10):
+            st = sm.load(i)
+            np.testing.assert_array_equal(st["c"], _state(i)["c"])
+
+
+def test_memory_budget_enforced_with_spill():
+    with tempfile.TemporaryDirectory() as d:
+        budget = 5 * 420  # ~5 states
+        sm = ClientStateManager(d, memory_budget_bytes=budget)
+        for i in range(50):
+            sm.save(i, _state(i))
+        assert sm.memory_bytes <= budget
+        assert sm.stats["spills"] >= 40
+        assert sm.disk_bytes() > 0
+        # spilled states still load correctly (from disk)
+        st = sm.load(0)
+        np.testing.assert_array_equal(st["c"], _state(0)["c"])
+        assert sm.stats["loads"] >= 1
+
+
+def test_lru_keeps_hot_clients_in_memory():
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d, memory_budget_bytes=3 * 420)
+        for i in range(3):
+            sm.save(i, _state(i))
+        sm.load(0)                  # touch 0 -> most recent
+        sm.save(3, _state(3))       # evicts LRU (1)
+        sm.load(0)
+        assert sm.stats["hits"] >= 2
+
+
+def test_missing_client_returns_default():
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d)
+        assert sm.load(999) is None
+        assert sm.load(999, default={"x": 1}) == {"x": 1}
+
+
+def test_checkpoint_restore_roundtrip():
+    with tempfile.TemporaryDirectory() as d, \
+            tempfile.TemporaryDirectory() as ck:
+        sm = ClientStateManager(d + "/a", memory_budget_bytes=2 * 420)
+        for i in range(8):
+            sm.save(i, _state(i))
+        sm.checkpoint(ck)
+        sm2 = ClientStateManager(d + "/b")
+        n = sm2.restore(ck)
+        assert n == 8
+        for i in range(8):
+            np.testing.assert_array_equal(sm2.load(i)["c"], _state(i)["c"])
+
+
+def test_owner_host_is_deterministic_partition():
+    owners = [owner_host(c, 4) for c in range(1000)]
+    assert set(owners) <= set(range(4))
+    counts = np.bincount(owners, minlength=4)
+    assert counts.min() > 150        # roughly balanced
+    assert owners == [owner_host(c, 4) for c in range(1000)]
+
+
+def test_rebalance_moves_states_to_new_owners():
+    with tempfile.TemporaryDirectory() as d:
+        mgrs = {h: ClientStateManager(f"{d}/h{h}", host=h, n_hosts=2)
+                for h in range(2)}
+        # write each state to its 2-host owner
+        for c in range(40):
+            mgrs[owner_host(c, 2)].save(c, _state(c))
+        # grow to 4 hosts
+        for h in (2, 3):
+            mgrs[h] = ClientStateManager(f"{d}/h{h}", host=h, n_hosts=4)
+        moved = 0
+        for h in (0, 1):
+            moved += mgrs[h].rebalance(4, mgrs)
+        assert moved > 0
+        for c in range(40):
+            st = mgrs[owner_host(c, 4)].load(c)
+            assert st is not None
+            np.testing.assert_array_equal(st["c"], _state(c)["c"])

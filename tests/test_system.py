@@ -1,0 +1,230 @@
+"""End-to-end behaviour tests for the Parrot system (the paper's claims).
+
+The central invariant (Fig. 4 / §4.2): Parrot's sequential + hierarchical
+execution produces the SAME model as the flat single-process reference, for
+every algorithm, under any scheduler, any executor count, with state spilled
+to disk, with failures injected, and across checkpoint/restore.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ClientStateManager, ParrotServer, SequentialExecutor,
+                        make_algorithm, run_flat_reference)
+from repro.data import make_classification_clients
+
+
+def _loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+GRAD_FN = jax.jit(jax.value_and_grad(_loss_fn))
+PARAMS0 = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+
+
+def _data(n=40, seed=1):
+    return make_classification_clients(n, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10,
+                                       seed=seed)
+
+
+def _make_server(algo, data, K=4, state_dir=None, budget=1 << 20, **kw):
+    sm = ClientStateManager(state_dir or tempfile.mkdtemp(),
+                            memory_budget_bytes=budget)
+    execs = [SequentialExecutor(k, algo, state_manager=sm) for k in range(K)]
+    return ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
+                        data_by_client=data, clients_per_round=10, seed=7,
+                        **kw)
+
+
+def _max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedprox", "fednova", "mime",
+                                  "scaffold", "feddyn"])
+def test_parrot_equals_flat_reference(name):
+    """Hierarchical aggregation is exact for all six algorithms."""
+    data = _data()
+    flat, _ = run_flat_reference(
+        PARAMS0, make_algorithm(name, GRAD_FN, 0.1, local_epochs=2),
+        data, clients_per_round=10, n_rounds=3, seed=7)
+    srv = _make_server(make_algorithm(name, GRAD_FN, 0.1, local_epochs=2),
+                       data)
+    srv.run(3)
+    assert _max_diff(flat, srv.params) < 1e-5
+
+
+@pytest.mark.parametrize("K", [1, 3, 8])
+def test_result_independent_of_executor_count(K):
+    """K is a pure throughput knob: the trained model must not depend on it."""
+    data = _data()
+    srv = _make_server(make_algorithm("scaffold", GRAD_FN, 0.1), data, K=K)
+    srv.run(3)
+    ref_srv = _make_server(make_algorithm("scaffold", GRAD_FN, 0.1), data, K=2)
+    ref_srv.run(3)
+    assert _max_diff(srv.params, ref_srv.params) < 1e-5
+
+
+@pytest.mark.parametrize("policy", ["parrot", "uniform", "none"])
+def test_result_independent_of_scheduler(policy):
+    """Scheduling changes placement, never the aggregate."""
+    data = _data()
+    srv = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data,
+                       scheduler_policy=policy)
+    srv.run(3)
+    flat, _ = run_flat_reference(
+        PARAMS0, make_algorithm("fedavg", GRAD_FN, 0.1), data,
+        clients_per_round=10, n_rounds=3, seed=7)
+    assert _max_diff(flat, srv.params) < 1e-5
+
+
+def test_stateful_with_tiny_memory_budget_spills_to_disk():
+    """SCAFFOLD with a state-manager budget so small every state spills;
+    results must be identical to the unbounded run (paper §3.4)."""
+    data = _data()
+    srv_small = _make_server(make_algorithm("scaffold", GRAD_FN, 0.1), data,
+                             budget=1024)     # forces spill every save
+    srv_small.run(4)
+    srv_big = _make_server(make_algorithm("scaffold", GRAD_FN, 0.1), data,
+                           budget=1 << 30)
+    srv_big.run(4)
+    assert _max_diff(srv_small.params, srv_big.params) < 1e-5
+    sm = next(iter(srv_small.executors.values())).state_manager
+    assert sm.stats["spills"] > 0 and sm.stats["loads"] > 0
+
+
+def test_executor_failure_recovers_and_shrinks_K():
+    """An executor dying mid-round: its remaining tasks re-run on survivors,
+    K shrinks, and the round result equals the no-failure run."""
+    data = _data()
+    algo = make_algorithm("fedavg", GRAD_FN, 0.1)
+    sm = ClientStateManager(tempfile.mkdtemp())
+    execs = [SequentialExecutor(k, algo, state_manager=sm) for k in range(4)]
+    execs[2].fail_at = (1, 1)   # dies at round 1, task index 1
+    srv = ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
+                       data_by_client=data, clients_per_round=10, seed=7)
+    srv.run(3)
+    assert srv.history[1].failures == 1
+    assert srv.history[2].n_executors == 3
+    ref_srv = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data)
+    ref_srv.run(3)
+    assert _max_diff(srv.params, ref_srv.params) < 1e-5
+
+
+def test_compression_int8_stays_close():
+    from repro.core.compression import make_compressor
+    data = _data()
+    srv = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data,
+                       compressor=make_compressor("int8"))
+    srv.run(3)
+    ref_srv = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data)
+    ref_srv.run(3)
+    # int8 is lossy but must stay in the same neighbourhood
+    assert _max_diff(srv.params, ref_srv.params) < 0.05
+
+
+def test_hierarchical_comm_is_O_K_not_O_Mp():
+    """Table 1: comm trips O(K); broadcast K + K partials, not 2·M_p."""
+    data = _data()
+    srv = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data, K=4)
+    m = srv.run_round()
+    assert m.comm_trips == 2 * 4          # K broadcasts + K partials
+    assert m.n_clients == 10              # M_p > K
+
+
+def test_checkpoint_restore_resumes_identically():
+    from repro.checkpoint import CheckpointManager, restore_latest
+    data = _data()
+    with tempfile.TemporaryDirectory() as d:
+        algo = make_algorithm("scaffold", GRAD_FN, 0.1)
+        srv = _make_server(algo, data, state_dir=d + "/state",
+                           checkpoint_manager=CheckpointManager(
+                               d + "/ckpt", keep=10))
+        srv.run(3)
+        params_after_3 = srv.params
+        srv.run(2)          # rounds 3,4
+        final = srv.params
+
+        algo2 = make_algorithm("scaffold", GRAD_FN, 0.1)
+        srv2 = _make_server(algo2, data, state_dir=d + "/state2")
+        restored = restore_latest(srv2, d + "/ckpt")
+        assert restored == 5
+        step3 = os.path.join(d + "/ckpt", "step_00000003")
+        assert os.path.isdir(step3)
+        CheckpointManager(d + "/ckpt").restore(srv2, step3)
+        assert _max_diff(srv2.params, params_after_3) < 1e-6
+        srv2.run(2)
+        assert _max_diff(srv2.params, final) < 1e-5
+
+
+def test_torn_checkpoint_is_skipped_on_restore():
+    from repro.checkpoint import CheckpointManager, restore_latest
+    data = _data()
+    with tempfile.TemporaryDirectory() as d:
+        algo = make_algorithm("fedavg", GRAD_FN, 0.1)
+        srv = _make_server(algo, data,
+                           checkpoint_manager=CheckpointManager(
+                               d + "/ckpt", keep=10))
+        srv.run(2)
+        # fabricate a torn (manifest-less) newer checkpoint
+        torn = os.path.join(d + "/ckpt", "step_00000099")
+        os.makedirs(torn)
+        with open(os.path.join(torn, "server.pkl"), "wb") as f:
+            f.write(b"garbage")
+        with open(os.path.join(d + "/ckpt", "LATEST"), "w") as f:
+            f.write("step_00000099")
+        srv2 = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data)
+        restored = restore_latest(srv2, d + "/ckpt")
+        assert restored == 2      # fell back to the newest complete one
+
+
+def test_overlap_scheduling_matches_non_overlapped():
+    data = _data()
+    srv_a = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data,
+                         overlap_scheduling=True)
+    srv_a.run(4)
+    srv_b = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data,
+                         overlap_scheduling=False)
+    srv_b.run(4)
+    assert _max_diff(srv_a.params, srv_b.params) < 1e-6
+
+
+def test_parallel_dispatch_matches_serial():
+    data = _data()
+    srv_a = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data,
+                         parallel_dispatch=True)
+    srv_a.run(3)
+    srv_b = _make_server(make_algorithm("fedavg", GRAD_FN, 0.1), data)
+    srv_b.run(3)
+    assert _max_diff(srv_a.params, srv_b.params) < 1e-5
+
+
+def test_scheduling_reduces_makespan_under_heterogeneity():
+    """The paper's headline claim (Figs. 5/9): with heterogeneous devices,
+    Parrot scheduling beats naive round-robin placement."""
+    from repro.core.executor import hetero_gpus
+    data = _data(n=60, seed=3)
+    ratios = {0: 0.0, 1: 0.0, 2: 3.0, 3: 3.0}   # two slow executors
+
+    def run(policy):
+        algo = make_algorithm("fedavg", GRAD_FN, 0.1)
+        sm = ClientStateManager(tempfile.mkdtemp())
+        execs = [SequentialExecutor(k, algo, state_manager=sm,
+                                    speed_model=hetero_gpus(ratios))
+                 for k in range(4)]
+        srv = ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
+                           data_by_client=data, clients_per_round=20,
+                           scheduler_policy=policy, warmup_rounds=2, seed=7)
+        ms = [srv.run_round().makespan for _ in range(8)]
+        return sum(ms[3:]) / len(ms[3:])   # after estimator warm-up
+
+    assert run("parrot") < run("none") * 0.95
