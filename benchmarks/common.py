@@ -1,7 +1,8 @@
 """Shared benchmark plumbing: the standard FL workload (paper §5.1 scaled to
-this container), timing helpers, and CSV emission."""
+this container), timing helpers, and CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import sys
 import tempfile
 import time
@@ -19,12 +20,24 @@ from repro.core.executor import SpeedModel, dynamic_env, hetero_gpus, homogeneou
 from repro.data import make_classification_clients
 
 ROWS: List[str] = []
+RECORDS: List[Dict[str, object]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us_per_call": float(us_per_call),
+                    "derived": derived})
     print(row, flush=True)
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row as machine-readable JSON — the per-PR perf
+    trajectory format (``BENCH_*.json``)."""
+    with open(path, "w") as f:
+        json.dump({"schema": "repro-bench/1", "rows": RECORDS}, f, indent=2)
+        f.write("\n")
+    print(f"wrote {len(RECORDS)} rows to {path}", flush=True)
 
 
 def _loss_fn(params, batch):

@@ -1,6 +1,13 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+dumps the rows as machine-readable JSON (the per-PR ``BENCH_*.json`` perf
+trajectory format).  ``--only NAME[,NAME...]`` (or legacy positional names)
+restricts the run to specific modules, e.g.::
+
+    python benchmarks/run.py --only bench_aggregation --json BENCH_agg.json
+
+Mapping to the paper:
 
   bench_scheduling  — Figs. 5, 9, 10 (round time: scheduled vs not, hetero)
   bench_estimation  — Figs. 6, 11 (workload-model error; time-window)
@@ -8,26 +15,59 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   bench_memory      — Tables 1, 3 (memory per scheme; state manager)
   bench_comm        — Table 1 (comm size/trips; hierarchical vs flat)
   bench_algorithms  — Fig. 4 (six algorithms: exactness + round times)
+  bench_aggregation — flat-buffer batched C=B fold: GB/s + dispatches/client
+                      vs the legacy per-leaf C=1 path
   bench_kernels     — Pallas wrapper micro-timings (plumbing check)
   roofline          — §Roofline terms from the dry-run artifacts
 """
+import argparse
+import os
 import sys
 
 sys.path.insert(0, "src")
 
+MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
+        "bench_memory", "bench_comm", "bench_algorithms",
+        "bench_aggregation", "bench_kernels", "roofline"]
 
-def main() -> None:
+
+def main(argv=None) -> None:
     import importlib
-    mods = ["bench_scheduling", "bench_estimation", "bench_scaling",
-            "bench_memory", "bench_comm", "bench_algorithms",
-            "bench_kernels", "roofline"]
-    only = sys.argv[1:] or None
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--only", action="append", default=None,
+                   metavar="NAME[,NAME]",
+                   help="run only these benchmark modules")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write the rows as JSON (BENCH_*.json)")
+    p.add_argument("names", nargs="*",
+                   help="legacy positional module filter")
+    args = p.parse_args(argv)
+
+    only = set(args.names)
+    for grp in (args.only or []):
+        only.update(x for x in grp.split(",") if x)
+    if args.only and not only:
+        p.error("--only given but no module names resolved")
+    unknown = only - set(MODS)
+    if unknown:
+        p.error(f"unknown benchmark module(s): {sorted(unknown)}; "
+                f"choose from {MODS}")
+    if args.json:
+        d = os.path.dirname(args.json) or "."
+        if not os.path.isdir(d) or not os.access(d, os.W_OK):
+            p.error(f"--json: directory not writable: {d}")
+
     print("name,us_per_call,derived")
-    for m in mods:
+    for m in MODS:
         if only and m not in only:
             continue
         mod = importlib.import_module(f"benchmarks.{m}")
         mod.run()
+
+    if args.json:
+        from benchmarks import common
+        common.write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,9 @@ level deeper.
 ``spmd_global_aggregate`` takes the per-executor partials stacked on the
 leading axis, shards them over a mesh axis, and reduces with a single
 collective; it matches ``aggregation.global_aggregate`` exactly (tested).
+Flat-buffer partials (the ``LocalAggregator`` wire format) reduce even
+better: ONE collective per weight group — the whole multi-entry partial is
+a single contiguous (n,) buffer — instead of one per entry/leaf.
 ``CollectiveComm`` adapts the same mechanism to the Communicator interface
 so the round engine can swap transports without code changes.
 """
@@ -46,9 +49,22 @@ def spmd_global_aggregate(partials: List[Dict], ops: Dict[str, Any],
     lowers to a single all-reduce; otherwise it runs as a local sum (the
     K=devices degenerate case — same math either way).
     """
-    from repro.core.aggregation import Op
-    out: Dict[str, Any] = {}
+    from repro.core.aggregation import Op, reduce_flat_partials
+    from repro.core.flat import is_flat_partial
     K = len(partials)
+
+    if partials and all(is_flat_partial(p) for p in partials):
+        # flat wire format: one sharded reduction per weight group covers
+        # every reducible entry at once
+        def reduce_group(bufs):
+            x = jnp.stack(bufs)
+            if mesh is not None and len(bufs) % mesh.shape[axis] == 0:
+                x = jax.device_put(x, NamedSharding(mesh, P(axis, None)))
+            return jnp.sum(x, axis=0)
+
+        return reduce_flat_partials(partials, ops, reduce_group)
+
+    out: Dict[str, Any] = {}
     for name, op in ops.items():
         if op is Op.COLLECT:
             coll: List[Any] = []

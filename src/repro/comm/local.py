@@ -18,7 +18,8 @@ def _nbytes(payload: Any) -> int:
     from repro.core.aggregation import payload_bytes
     try:
         if isinstance(payload, dict) and "_wire_bytes" in payload:
-            # compressed partial: count the achieved wire size
+            # compressed partial: count the achieved wire size of the sums
+            # (flat group buffers or nested leaves) + the uncompressed rest
             rest = {k: v for k, v in payload.items()
                     if k not in ("sums", "_wire_bytes")}
             return int(payload["_wire_bytes"]) + payload_bytes(rest)

@@ -2,6 +2,7 @@
 
   scheduler.py / workload.py — heterogeneity-aware task scheduling (Alg. 3)
   aggregation.py             — hierarchical local→global aggregation (§4.2)
+  flat.py                    — flatten-once layout for batched folds
   state_manager.py           — client state manager for stateful FL (§3.4)
   algorithms.py              — 6 FL algorithms over generic pytrees (§5.1)
   executor.py / round.py     — sequential executors + round engine (Alg. 2)
@@ -9,6 +10,7 @@
 """
 from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
                                     flat_aggregate, global_aggregate)
+from repro.core.flat import FlatLayout
 from repro.core.algorithms import (ALGORITHMS, ClientData, FLAlgorithm,
                                    make_algorithm)
 from repro.core.executor import SequentialExecutor
@@ -19,7 +21,8 @@ from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
 
 __all__ = [
     "ALGORITHMS", "ClientData", "ClientResult", "ClientStateManager",
-    "ClientTask", "FLAlgorithm", "LocalAggregator", "Op", "ParrotScheduler",
+    "ClientTask", "FLAlgorithm", "FlatLayout", "LocalAggregator", "Op",
+    "ParrotScheduler",
     "ParrotServer", "RoundMetrics", "RunRecord", "Schedule",
     "SequentialExecutor", "WorkloadEstimator", "WorkloadModel",
     "flat_aggregate", "global_aggregate", "make_algorithm", "owner_host",

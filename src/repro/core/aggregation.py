@@ -1,5 +1,5 @@
 """Hierarchical (local → global) aggregation with OP-typed parameters
-(paper §3.2, §4.2).
+(paper §3.2, §4.2) on a flatten-once flat-buffer layout.
 
 Users declare, per communicated entry, an aggregation OP:
 
@@ -15,18 +15,33 @@ partial (``LocalAggregator``), the server combines the K partials
 aggregation; tests assert bit-level agreement for the reducible OPs.
 
 The fold's inner loop (fp32 ``acc += w · x`` over every model parameter for
-every simulated client) is the memory-bound hot-spot of the whole simulator —
-``use_kernel=True`` routes it through the Pallas ``agg_weighted_sum`` kernel.
+every simulated client) is the memory-bound hot-spot of the whole simulator.
+``LocalAggregator`` therefore flattens each client's reducible payload ONCE
+into a contiguous 1-D buffer per weight group (see ``flat.FlatLayout``),
+stages up to ``micro_batch`` (B) client buffers, and folds them with a single
+multi-client ``agg_weighted_sum`` call at C=B — one kernel dispatch per
+micro-batch instead of one per pytree leaf per client.  ``use_kernel=True``
+routes the flush through the Pallas kernel (with buffer donation on the
+accumulator when it is not externally visible); ``use_kernel=False`` runs the
+bit-identical pure-jnp ``w @ D`` contraction.
+
+The partial's wire format is flat too — ``{"sums": {"__flat__": True,
+"buffers": {group: (n,) fp32}}, "layout": FlatLayout, ...}`` — so the comm
+layer and the delta compressors move one array per partial instead of a
+nested dict of leaves; ``global_aggregate`` combines partials with K-1
+buffer adds per group and unflattens once at the end.
 """
 from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.flat import FlatLayout, flat_sums, is_flat_partial
 
 
 class Op(enum.Enum):
@@ -49,25 +64,37 @@ class ClientResult:
     metrics: Dict[str, float] = field(default_factory=dict)
 
 
-def _fold_weighted(acc, x, w: float, use_kernel: bool):
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return jax.tree.map(lambda a, b: kops.agg_fold(a, b, w), acc, x)
-    return jax.tree.map(
-        lambda a, b: a + w * b.astype(jnp.float32), acc, x)
+@jax.jit
+def _flush_jnp(acc, staged, w):
+    """Pure-jnp fused micro-batch flush (bit-identical contraction to the
+    kernel path's ``w @ D``)."""
+    return acc + jnp.dot(w, jnp.stack(staged).astype(jnp.float32))
 
 
 class LocalAggregator:
     """Per-executor running aggregate (``LocalAggregate`` in Algorithm 2).
 
-    Memory is O(s_a) regardless of how many clients the executor simulates —
+    Memory is O(s_a) plus the staged micro-batch (at most ``micro_batch``
+    client buffers) regardless of how many clients the executor simulates —
     this is the paper's memory claim for sequential training.
+
+    ``micro_batch`` (B) controls how many client delta buffers are staged
+    before ONE multi-client fold at C=B; the kernel path pads the final
+    flush to exactly B with zero-weight rows so only a single (B, n) kernel
+    specialisation is ever compiled per layout.
     """
 
-    def __init__(self, ops: Dict[str, Op], use_kernel: bool = False):
+    def __init__(self, ops: Dict[str, Op], use_kernel: bool = False,
+                 micro_batch: int = 16,
+                 layout: Optional[FlatLayout] = None):
         self.ops = dict(ops)
         self.use_kernel = use_kernel
-        self._sums: Dict[str, Any] = {}
+        self.micro_batch = max(1, int(micro_batch))
+        self.layout = layout
+        self._acc: Optional[Dict[str, jnp.ndarray]] = None
+        self._staged: Dict[str, List[jnp.ndarray]] = {}
+        self._staged_w: Dict[str, List[float]] = {}
+        self._exposed = False     # acc arrays escaped via partial(): no donate
         self._weights: Dict[str, float] = {}
         self._counts: Dict[str, int] = {}
         self._collected: Dict[str, List[Any]] = {}
@@ -75,43 +102,136 @@ class LocalAggregator:
 
     def fold(self, result: ClientResult) -> None:
         self.n_clients += 1
-        for name, value in result.payload.items():
+        payload = result.payload
+        for name in payload:
             op = self.ops[name]
             if op is Op.COLLECT:
                 self._collected.setdefault(name, []).append(
-                    (result.weight, value))
+                    (result.weight, payload[name]))
                 continue
             w = result.weight if op is Op.WEIGHTED_AVG else 1.0
-            if name not in self._sums:
-                self._sums[name] = jax.tree.map(
-                    lambda a: jnp.zeros(a.shape, jnp.float32), value)
-                self._weights[name] = 0.0
-                self._counts[name] = 0
-            if op is Op.SUM:
-                self._sums[name] = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32),
-                    self._sums[name], value)
+            self._weights[name] = self._weights.get(name, 0.0) + w
+            self._counts[name] = self._counts.get(name, 0) + 1
+        if self.layout is None:
+            self.layout = FlatLayout.build(self.ops, payload)
+        if self._acc is None:
+            self._acc = self.layout.zeros()
+            self._staged = {g: [] for g in self._acc}
+            self._staged_w = {g: [] for g in self._acc}
+            # zero rows that pad the final kernel flush up to B (shared)
+            self._pad = {g: jnp.zeros((n,), self.layout.group_dtypes[g])
+                         for g, n in self.layout.group_sizes.items()}
+        for g, buf in self.layout.flatten(payload).items():
+            self._staged[g].append(buf)
+            self._staged_w[g].append(
+                result.weight if g == "weighted" else 1.0)
+        if any(len(s) >= self.micro_batch for s in self._staged.values()):
+            self._flush()
+
+    def _flush(self) -> None:
+        """Fold the staged micro-batch: ONE fused C=B dispatch per group."""
+        for g, staged in self._staged.items():
+            if not staged:
+                continue
+            t = len(staged)
+            w = self._staged_w[g]
+            if self.use_kernel:
+                from repro.kernels import ops as kops
+                B = self.micro_batch
+                if t < B:   # zero-weight rows keep the (B, n) shape static
+                    staged = staged + [self._pad[g]] * (B - t)
+                    w = w + [0.0] * (B - t)
+                self._acc[g] = kops.agg_fold_batch(
+                    self._acc[g], staged, jnp.asarray(w, jnp.float32),
+                    donate=not self._exposed)
             else:
-                self._sums[name] = _fold_weighted(
-                    self._sums[name], value, w, self.use_kernel)
-            self._weights[name] += w
-            self._counts[name] += 1
+                self._acc[g] = _flush_jnp(
+                    self._acc[g], tuple(staged), jnp.asarray(w, jnp.float32))
+            self._staged[g] = []
+            self._staged_w[g] = []
+        self._exposed = False
 
     def partial(self) -> Dict[str, Any]:
-        """The G_k message sent to the server: one trip, O(s_a K) total."""
+        """The G_k message sent to the server: one trip, O(s_a K) total —
+        one flat fp32 buffer per group instead of a nested dict of leaves."""
+        if any(self._staged.values()):
+            self._flush()
+        self._exposed = True    # returned arrays must survive further folds
         return {
-            "sums": self._sums,
-            "weights": self._weights,
-            "counts": self._counts,
-            "collected": self._collected,
+            "sums": flat_sums(dict(self._acc) if self._acc is not None else {}),
+            "layout": self.layout,
+            "weights": dict(self._weights),
+            "counts": dict(self._counts),
+            "collected": {k: list(v) for k, v in self._collected.items()},
             "n_clients": self.n_clients,
         }
+
+
+# ---------------------------------------------------------------------------
+# global aggregate
+# ---------------------------------------------------------------------------
+
+def _sum_buffers(bufs: List[jnp.ndarray]) -> jnp.ndarray:
+    total = bufs[0]
+    for b in bufs[1:]:
+        total = total + b
+    return total
+
+
+def reduce_flat_partials(partials: List[Dict[str, Any]], ops: Dict[str, Op],
+                         reduce_fn: Callable[[List[jnp.ndarray]], jnp.ndarray]
+                         ) -> Dict[str, Any]:
+    """Combine flat partials: ``reduce_fn`` sums the per-group buffers (K-1
+    adds here; one sharded collective in ``comm.collective``), then each
+    entry is sliced, divided per its OP, and unflattened once."""
+    layout = next((p.get("layout") for p in partials
+                   if p.get("layout") is not None), None)
+    if layout is not None:
+        sig = layout.signature()
+        for p in partials:
+            other = p.get("layout")
+            if other is not None and other.signature() != sig:
+                raise ValueError("flat partials built under different layouts")
+    totals: Dict[str, jnp.ndarray] = {}
+    for g in (layout.group_sizes if layout is not None else {}):
+        bufs = [p["sums"]["buffers"][g] for p in partials
+                if g in p["sums"]["buffers"]]
+        if bufs:
+            totals[g] = reduce_fn(bufs)
+    out: Dict[str, Any] = {}
+    for name, op in ops.items():
+        if op is Op.COLLECT:
+            coll: List[Any] = []
+            for p in partials:
+                coll.extend(p["collected"].get(name, []))
+            out[name] = coll
+            continue
+        span = layout.spans.get(name) if layout is not None else None
+        if span is None or span.group not in totals:
+            continue
+        seg = totals[span.group][span.offset:span.offset + span.size]
+        if op is Op.AVG:
+            n = sum(p["counts"].get(name, 0) for p in partials)
+            seg = seg / max(n, 1)
+        elif op is Op.WEIGHTED_AVG:
+            wtot = sum(p["weights"].get(name, 0.0) for p in partials)
+            seg = seg / max(wtot, 1e-12)
+        out[name] = layout.unflatten_entry(name, seg)
+    return out
 
 
 def global_aggregate(partials: List[Dict[str, Any]],
                      ops: Dict[str, Op]) -> Dict[str, Any]:
     """``GlobalAggregate`` in Algorithm 2: combine the K partials (K-1 sums
-    at the server instead of M_p-1)."""
+    at the server instead of M_p-1).  Flat partials combine buffer-wise —
+    one add chain per group; legacy nested partials keep the per-entry
+    tree-map path (mixed inputs degrade flat ones to nested)."""
+    if partials and all(is_flat_partial(p) for p in partials):
+        return reduce_flat_partials(partials, ops, _sum_buffers)
+    if any(is_flat_partial(p) for p in partials):
+        from repro.core.flat import to_nested_sums
+        partials = [dict(p, sums=to_nested_sums(p)) if is_flat_partial(p)
+                    else p for p in partials]
     out: Dict[str, Any] = {}
     for name, op in ops.items():
         if op is Op.COLLECT:
@@ -146,10 +266,18 @@ def flat_aggregate(results: List[ClientResult],
 
 
 def payload_bytes(tree: Any) -> int:
+    """Wire size of a payload/partial: arrays at shape x itemsize (flat group
+    buffers included), compressed tensors at their achieved nbytes, scalars
+    at 8; layout metadata is free."""
     total = 0
     for a in jax.tree.leaves(tree):
-        if hasattr(a, "shape") and hasattr(a, "dtype"):
+        # CompressedTensor carries shape + a *str* dtype: require a real
+        # dtype (itemsize) before the dense branch, else fall to nbytes
+        if hasattr(a, "shape") and hasattr(getattr(a, "dtype", None),
+                                           "itemsize"):
             total += int(np.prod(a.shape)) * a.dtype.itemsize
+        elif hasattr(a, "nbytes"):      # CompressedTensor and friends
+            total += int(a.nbytes)
         elif isinstance(a, (int, float, bool)):
             total += 8
     return total

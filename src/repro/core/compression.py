@@ -9,17 +9,27 @@ compression attacks the remaining s_a factor on the WEIGHTED_AVG entries:
   scheme stays unbiased in the long run).
 - ``Int8Compressor``: per-chunk symmetric int8 quantisation (4x over fp32).
 
+Both operate on the FLAT partial wire format: an entry occupies one
+contiguous span of its group buffer (``core.flat.FlatLayout``), so each
+target entry compresses as a single 1-D array — one top-k / one quant scale
+over the whole entry instead of one per pytree leaf.  A compressed group
+buffer becomes an ordered list of (raw | compressed) segments that
+``decompress_partial`` concatenates back into the fp32 buffer.  The legacy
+nested {entry: pytree} partial form is still accepted (per-leaf path).
+
 Both compress only the reducible sums (COLLECT entries pass through), and
 both report the achieved wire size so the comm benchmarks can account them.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.flat import flat_sums, is_flat_sums
 
 
 @dataclass
@@ -34,13 +44,112 @@ class CompressedTensor:
         return sum(int(a.nbytes) for a in self.data.values())
 
 
-class TopKCompressor:
+class PartialCompressor:
+    """Shared compress/decompress plumbing over the flat partial format.
+
+    Subclasses provide ``_compress(a, key) -> CompressedTensor`` and
+    ``_decompress(c) -> np.ndarray``; ``entries`` names the target entries
+    (everything else rides raw)."""
+
+    entries: Tuple[str, ...] = ("delta",)
+
+    # --- subclass hooks ---------------------------------------------------
+    def _compress(self, a: np.ndarray, key: str) -> CompressedTensor:
+        raise NotImplementedError
+
+    def _decompress(self, c: CompressedTensor) -> np.ndarray:
+        raise NotImplementedError
+
+    # --- flat path --------------------------------------------------------
+    def _compress_flat(self, sums: Dict, layout) -> Dict:
+        buffers = dict(sums["buffers"])
+        if layout is None:
+            return flat_sums(buffers)
+        spans_by_group: Dict[str, List[Tuple[int, int, str]]] = {}
+        for name in self.entries:
+            span = layout.spans.get(name)
+            if span is not None:
+                spans_by_group.setdefault(span.group, []).append(
+                    (span.offset, span.size, name))
+        for g, spans in spans_by_group.items():
+            buf = buffers.get(g)
+            if buf is None or isinstance(buf, dict):
+                continue
+            arr = np.asarray(buf, np.float32)
+            segments: List[Tuple[str, Any]] = []
+            cursor = 0
+            for off, size, name in sorted(spans):
+                if off > cursor:             # untargeted entries ride raw
+                    segments.append(("raw", arr[cursor:off]))
+                segments.append(
+                    ("comp", self._compress(arr[off:off + size],
+                                            f"{g}/{name}")))
+                cursor = off + size
+            if cursor < arr.size:
+                segments.append(("raw", arr[cursor:]))
+            buffers[g] = {"__compressed__": True, "segments": segments,
+                          "size": int(arr.size)}
+        return flat_sums(buffers)
+
+    def _decompress_flat(self, sums: Dict) -> Dict:
+        buffers = {}
+        for g, buf in sums["buffers"].items():
+            if isinstance(buf, dict) and buf.get("__compressed__"):
+                pieces = [np.asarray(x, np.float32) if kind == "raw"
+                          else self._decompress(x).reshape(-1)
+                          for kind, x in buf["segments"]]
+                buffers[g] = jnp.asarray(
+                    pieces[0] if len(pieces) == 1 else np.concatenate(pieces))
+            else:
+                buffers[g] = buf
+        return flat_sums(buffers)
+
+    # --- legacy nested path ----------------------------------------------
+    def _compress_nested(self, sums: Dict) -> Dict:
+        out = dict(sums)
+        for name in self.entries:
+            if name not in out:
+                continue
+            leaves, treedef = jax.tree.flatten(out[name])
+            comp = [self._compress(np.asarray(l), f"{name}/{i}")
+                    for i, l in enumerate(leaves)]
+            out[name] = {"__compressed__": True, "treedef": treedef,
+                         "leaves": comp}
+        return out
+
+    def _decompress_nested(self, sums: Dict) -> Dict:
+        out = dict(sums)
+        for name, v in list(out.items()):
+            if isinstance(v, dict) and v.get("__compressed__"):
+                leaves = [jnp.asarray(self._decompress(c))
+                          for c in v["leaves"]]
+                out[name] = jax.tree.unflatten(v["treedef"], leaves)
+        return out
+
+    # --- public API -------------------------------------------------------
+    def compress_partial(self, partial: Dict) -> Dict:
+        out = dict(partial)
+        sums = partial["sums"]
+        out["sums"] = (self._compress_flat(sums, partial.get("layout"))
+                       if is_flat_sums(sums) else self._compress_nested(sums))
+        out["_wire_bytes"] = _wire_bytes(out["sums"])
+        return out
+
+    def decompress_partial(self, partial: Dict) -> Dict:
+        out = dict(partial)
+        sums = partial["sums"]
+        out["sums"] = (self._decompress_flat(sums)
+                       if is_flat_sums(sums) else self._decompress_nested(sums))
+        return out
+
+
+class TopKCompressor(PartialCompressor):
     """Magnitude top-k with per-executor error feedback."""
 
     def __init__(self, fraction: float = 0.01, entries: tuple = ("delta",)):
         self.fraction = fraction
         self.entries = entries
-        self._residual: Dict[str, Any] = {}   # keyed by (executor-ish) id
+        self._residual: Dict[str, Any] = {}   # keyed by (group/entry) span
 
     def _compress_array(self, a: np.ndarray, key: str) -> CompressedTensor:
         flat = np.asarray(a, np.float32).reshape(-1)
@@ -62,34 +171,11 @@ class TopKCompressor:
         flat[c.data["idx"]] = c.data["vals"]
         return flat.reshape(c.shape)
 
-    def compress_partial(self, partial: Dict) -> Dict:
-        out = dict(partial)
-        sums = dict(partial["sums"])
-        for name in self.entries:
-            if name not in sums:
-                continue
-            leaves, treedef = jax.tree.flatten(sums[name])
-            comp = [self._compress_array(np.asarray(l), f"{name}/{i}")
-                    for i, l in enumerate(leaves)]
-            sums[name] = {"__compressed__": True, "treedef": treedef,
-                          "leaves": comp}
-        out["sums"] = sums
-        out["_wire_bytes"] = _wire_bytes(sums)
-        return out
-
-    def decompress_partial(self, partial: Dict) -> Dict:
-        out = dict(partial)
-        sums = dict(partial["sums"])
-        for name, v in list(sums.items()):
-            if isinstance(v, dict) and v.get("__compressed__"):
-                leaves = [jnp.asarray(self._decompress_array(c))
-                          for c in v["leaves"]]
-                sums[name] = jax.tree.unflatten(v["treedef"], leaves)
-        out["sums"] = sums
-        return out
+    _compress = _compress_array
+    _decompress = _decompress_array
 
 
-class Int8Compressor:
+class Int8Compressor(PartialCompressor):
     """Symmetric per-tensor int8 quantisation with fp32 scale."""
 
     def __init__(self, entries: tuple = ("delta",)):
@@ -106,33 +192,22 @@ class Int8Compressor:
     def _decompress_array(self, c: CompressedTensor) -> np.ndarray:
         return c.data["q"].astype(np.float32) * c.data["scale"]
 
-    def compress_partial(self, partial: Dict) -> Dict:
-        out = dict(partial)
-        sums = dict(partial["sums"])
-        for name in self.entries:
-            if name not in sums:
-                continue
-            leaves, treedef = jax.tree.flatten(sums[name])
-            comp = [self._compress_array(np.asarray(l)) for l in leaves]
-            sums[name] = {"__compressed__": True, "treedef": treedef,
-                          "leaves": comp}
-        out["sums"] = sums
-        out["_wire_bytes"] = _wire_bytes(sums)
-        return out
+    def _compress(self, a: np.ndarray, key: str) -> CompressedTensor:
+        return self._compress_array(a)
 
-    def decompress_partial(self, partial: Dict) -> Dict:
-        out = dict(partial)
-        sums = dict(partial["sums"])
-        for name, v in list(sums.items()):
-            if isinstance(v, dict) and v.get("__compressed__"):
-                leaves = [jnp.asarray(self._decompress_array(c))
-                          for c in v["leaves"]]
-                sums[name] = jax.tree.unflatten(v["treedef"], leaves)
-        out["sums"] = sums
-        return out
+    def _decompress(self, c: CompressedTensor) -> np.ndarray:
+        return self._decompress_array(c)
 
 
 def _wire_bytes(sums: Dict) -> int:
+    if is_flat_sums(sums):
+        tot = 0
+        for buf in sums["buffers"].values():
+            if isinstance(buf, dict) and buf.get("__compressed__"):
+                tot += sum(int(x.nbytes) for _, x in buf["segments"])
+            else:
+                tot += int(np.prod(np.shape(buf))) * buf.dtype.itemsize
+        return tot
     tot = 0
     for v in sums.values():
         if isinstance(v, dict) and v.get("__compressed__"):

@@ -14,10 +14,17 @@ computes the BSP round time as max_k Σ_task time — exactly the paper's
 "server waits for the slowest executor".
 
 Straggler backup tasks: when ``backup_fraction > 0`` the round engine
-re-issues the last tasks of the predicted-slowest queue onto the
-predicted-fastest executor (speculative duplicates; first result wins) —
-tail mitigation at 1000-node scale where a single dead/slow host would
+duplicates the tail of the predicted-slowest queue onto the
+predicted-fastest executor (speculative duplicates resolved through the
+``skip_clients`` hook below, so each client folds exactly once) — tail
+mitigation at 1000-node scale where a single dead/slow host would
 otherwise stall every round.
+
+Aggregation inside ``run_queue`` uses the flat-buffer ``LocalAggregator``:
+the first round builds a ``FlatLayout`` for the algorithm's payload, which
+is cached here and reused for every subsequent round (flatten-once), and
+client deltas fold in micro-batches of ``agg_micro_batch`` — one kernel
+dispatch per B clients instead of one per pytree leaf per client.
 """
 from __future__ import annotations
 
@@ -72,12 +79,15 @@ class SequentialExecutor:
                  state_manager: Optional[ClientStateManager] = None,
                  speed_model: SpeedModel = homogeneous,
                  use_agg_kernel: bool = False,
+                 agg_micro_batch: int = 16,
                  fail_at: Optional[Tuple[int, int]] = None):
         self.id = executor_id
         self.algorithm = algorithm
         self.state_manager = state_manager
         self.speed_model = speed_model
         self.use_agg_kernel = use_agg_kernel
+        self.agg_micro_batch = agg_micro_batch
+        self._layout_cache = None   # FlatLayout, computed once, reused per round
         # fault-injection hook for the fault-tolerance tests:
         # (round, task_index) at which this executor dies.
         self.fail_at = fail_at
@@ -86,7 +96,9 @@ class SequentialExecutor:
                   data_by_client: Dict[int, ClientData],
                   skip_clients: Optional[set] = None) -> ExecutorReport:
         agg = LocalAggregator(self.algorithm.ops(),
-                              use_kernel=self.use_agg_kernel)
+                              use_kernel=self.use_agg_kernel,
+                              micro_batch=self.agg_micro_batch,
+                              layout=self._layout_cache)
         records: List[RunRecord] = []
         completed: List[int] = []
         vtime = 0.0
@@ -116,6 +128,7 @@ class SequentialExecutor:
                                      executor=self.id,
                                      n_samples=task.n_samples,
                                      time=simulated))
+        self._layout_cache = agg.layout     # flatten-once across rounds
         return ExecutorReport(
             executor=self.id, partial=agg.partial(), records=records,
             virtual_time=vtime, wall_time=time.perf_counter() - t_start,

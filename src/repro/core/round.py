@@ -24,7 +24,7 @@ from __future__ import annotations
 import concurrent.futures as cf
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -71,6 +71,7 @@ class ParrotServer:
                  mode: str = "parrot",
                  parallel_dispatch: bool = False,
                  overlap_scheduling: bool = False,
+                 backup_fraction: float = 0.0,
                  seed: int = 0):
         self.params = params
         self.algorithm = algorithm
@@ -87,6 +88,7 @@ class ParrotServer:
         self.mode = mode
         self.parallel_dispatch = parallel_dispatch
         self.overlap_scheduling = overlap_scheduling
+        self.backup_fraction = backup_fraction
         self._next_tasks: Optional[List[ClientTask]] = None
         self.server_state = algorithm.server_init(params)
         self.rng = np.random.default_rng(seed)
@@ -104,8 +106,41 @@ class ParrotServer:
                 for c in ids]
 
     # ------------------------------------------------------------------
-    def _dispatch(self, rnd: int, schedule: Schedule, payload: Dict
-                  ) -> List[ExecutorReport]:
+    def _plan_backups(self, schedule: Schedule
+                      ) -> Tuple[Dict[int, Set[int]], int]:
+        """Speculative backup tasks (tail mitigation at 1000-node scale):
+        duplicate the tail of the predicted-slowest queue onto the
+        predicted-fastest executor and tell the slow executor to skip those
+        clients (the ``skip_clients`` hook) — each client still folds exactly
+        once, so aggregation stays exact, and if either executor dies the
+        normal leftover re-run covers the duplicated clients."""
+        if self.backup_fraction <= 0 or len(self.executors) < 2:
+            return {}, 0
+        models = self.estimator.last_fit
+
+        def load(k: int) -> float:
+            m = models.get(k)
+            q = schedule.queue(k)
+            if m is not None:
+                return sum(m.predict(t.n_samples) for t in q)
+            return float(sum(t.n_samples for t in q))
+
+        ks = list(self.executors)
+        slow = max(ks, key=load)
+        fast = min(ks, key=load)
+        queue = schedule.queue(slow)
+        if slow == fast or not queue:
+            return {}, 0
+        n = min(len(queue), max(1, int(round(self.backup_fraction
+                                             * len(queue)))))
+        tail = queue[-n:]
+        schedule.assignment.setdefault(fast, []).extend(tail)
+        return {slow: {t.client for t in tail}}, len(tail)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, rnd: int, schedule: Schedule, payload: Dict,
+                  skip_map: Optional[Dict[int, Set[int]]] = None
+                  ) -> Tuple[List[ExecutorReport], int]:
         live = list(self.executors)
         self.comm.broadcast(payload, live, tag="broadcast")
         reports: List[ExecutorReport] = []
@@ -114,7 +149,8 @@ class ParrotServer:
 
         def run(k: int) -> ExecutorReport:
             return self.executors[k].run_queue(
-                rnd, schedule.queue(k), payload, self.data_by_client)
+                rnd, schedule.queue(k), payload, self.data_by_client,
+                skip_clients=(skip_map or {}).get(k))
 
         if self.parallel_dispatch:
             with cf.ThreadPoolExecutor(max_workers=len(live)) as pool:
@@ -139,10 +175,14 @@ class ParrotServer:
             survivors = [k for k in live if k not in failed]
             if not survivors:
                 raise RuntimeError("all executors failed")
+            # dedup by client: with backup duplicates a task can sit in two
+            # failed queues at once and must still re-run (and fold) once
             leftovers: List[ClientTask] = []
             for k in failed:
-                leftovers.extend(t for t in schedule.queue(k)
-                                 if t.client not in done_clients)
+                for t in schedule.queue(k):
+                    if t.client not in done_clients:
+                        done_clients.add(t.client)
+                        leftovers.append(t)
                 del self.executors[k]          # elastic K shrink
             for i, t in enumerate(leftovers):  # round-robin retry placement
                 k = survivors[i % len(survivors)]
@@ -150,11 +190,15 @@ class ParrotServer:
                     rnd, [t], payload, self.data_by_client)
                 reports.append(rep)
 
+        # the partial that reaches aggregation is the one that crossed the
+        # wire: compress once, ship, and aggregate the decompressed copy
+        # (error-feedback residuals and the aggregated values stay in sync)
         for rep in reports:
             self.comm.executor_send(rep.executor,
                                     self._maybe_compress(rep.partial),
                                     tag="partial")
-            self.comm.recv_from_executor(rep.executor, tag="partial")
+            rep.partial = self._maybe_decompress(
+                self.comm.recv_from_executor(rep.executor, tag="partial"))
         return reports, len(failed)
 
     def _maybe_compress(self, partial: Dict) -> Dict:
@@ -188,7 +232,8 @@ class ParrotServer:
 
         payload = self.algorithm.broadcast_payload(self.params,
                                                    self.server_state)
-        reports, n_failed = self._dispatch(rnd, schedule, payload)
+        skip_map, n_backups = self._plan_backups(schedule)
+        reports, n_failed = self._dispatch(rnd, schedule, payload, skip_map)
 
         # ---- aggregation ------------------------------------------------
         # overlap: prepare round r+1's schedule "while the reduce is in
@@ -200,7 +245,7 @@ class ParrotServer:
             self._pending_schedule = self.scheduler.schedule(
                 rnd + 1, self._next_tasks, list(self.executors))
 
-        partials = [self._maybe_decompress(r.partial) for r in reports]
+        partials = [r.partial for r in reports]   # already the wire copies
         ops = self.algorithm.ops()
         agg = global_aggregate(partials, ops)
         agg["_n_selected"] = sum(r.n_tasks for r in reports)
@@ -225,7 +270,8 @@ class ParrotServer:
             predicted_makespan=schedule.predicted_makespan,
             comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
             n_clients=len(tasks), n_executors=len(self.executors),
-            estimation_error=err, failures=n_failed)
+            estimation_error=err, failures=n_failed,
+            extra={"backup_tasks": float(n_backups)})
         self.history.append(metrics)
         self.round += 1
 

@@ -7,13 +7,20 @@ rate with the multiply-add fused on the VPU — one pass over the deltas, fp32
 accumulation regardless of delta dtype (bf16 deltas halve the bytes moved,
 which is the §Perf lever for the aggregation benchmark).
 
+The C axis is the multi-client micro-batch: ``LocalAggregator`` flattens each
+client's whole reducible payload into ONE contiguous (n,) buffer (see
+``core.flat.FlatLayout``), stages B of them, and issues a single C=B call —
+amortising dispatch overhead over B clients x all leaves instead of paying it
+per leaf per client.  B is static via the (C, n) shape, so a fixed micro-batch
+compiles exactly one kernel specialisation per layout.
+
 Tiling: 1-D grid over n/BLK element blocks; the (C, BLK) delta tile and the
 (BLK,) accumulator tile live in VMEM; weights ride in SMEM-like fashion as a
-small replicated block.
+small replicated block.  When n is block-aligned the input is neither padded
+nor sliced, and on the compiled (non-interpret) path the accumulator aliases
+the output (``input_output_aliases``) so the fold updates it in place.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,17 +35,39 @@ def _agg_kernel(w_ref, acc_ref, delta_ref, o_ref):
         w, d, (((0,), (0,)), ((), ())))               # w @ d -> (blk,)
 
 
-def agg_weighted_sum(acc, deltas, weights, *, blk: int = 65536,
+def _auto_blk(n: int, C: int, delta_itemsize: int, interpret: bool) -> int:
+    """Pick the element-block size.  Interpret mode (CPU validation) has no
+    VMEM: one grid step over the whole buffer minimises the per-step
+    interpreter overhead.  Compiled TPU fits the (C, blk) delta tile, its
+    fp32 compute copy, and the acc/out tiles in a ~8MB VMEM budget, rounded
+    down to the 128-lane tile."""
+    if interpret:
+        return n
+    budget = 8 * 1024 * 1024
+    per_elem = C * (delta_itemsize + 4) + 8          # deltas + f32 copy + acc/out
+    blk = max(512, budget // per_elem)
+    return max(128, (blk // 128) * 128)
+
+
+def agg_weighted_sum(acc, deltas, weights, *, blk: int = 0,
                      interpret: bool = True):
-    """acc: (n,) fp32; deltas: (C, n); weights: (C,) -> (n,) fp32."""
+    """acc: (n,) fp32; deltas: (C, n); weights: (C,) -> (n,) fp32.
+
+    ``blk=0`` auto-sizes the block (see ``_auto_blk``); pass an explicit
+    ``blk`` to pin the tiling (tests sweep it)."""
     (n,) = acc.shape
     C = deltas.shape[0]
+    if not blk:
+        blk = _auto_blk(n, C, deltas.dtype.itemsize, interpret)
     blk = min(blk, n)
     pad = (-n) % blk
-    if pad:
-        acc = jnp.pad(acc, (0, pad))
+    if pad:   # non-aligned n: pad in, slice out
+        acc_in = jnp.pad(acc, (0, pad))
         deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+    else:     # block-aligned n: no pad, no slice, aliasable accumulator
+        acc_in = acc
     npad = n + pad
+    alias = {} if (pad or interpret) else {1: 0}   # in-place acc on TPU
 
     out = pl.pallas_call(
         _agg_kernel,
@@ -50,6 +79,7 @@ def agg_weighted_sum(acc, deltas, weights, *, blk: int = 65536,
         ],
         out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        input_output_aliases=alias,
         interpret=interpret,
-    )(weights, acc, deltas)
-    return out[:n]
+    )(weights, acc_in, deltas)
+    return out[:n] if pad else out

@@ -38,16 +38,77 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
 
 
+_agg_dispatch_count = 0
+
+
+def agg_dispatch_count() -> int:
+    """Kernel dispatches issued through ``agg_weighted_sum`` so far (one per
+    call site, not per grid block) — the bench_aggregation metric."""
+    return _agg_dispatch_count
+
+
+def reset_agg_dispatch_count() -> None:
+    global _agg_dispatch_count
+    _agg_dispatch_count = 0
+
+
 @jax.jit
-def agg_weighted_sum(acc, deltas, weights):
-    """acc: (n,) fp32; deltas: (C, n); weights: (C,)."""
+def _agg_ws(acc, deltas, weights):
     return _agg.agg_weighted_sum(acc, deltas, weights,
                                  interpret=_use_interpret())
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _agg_ws_donated(acc, deltas, weights):
+    return _agg.agg_weighted_sum(acc, deltas, weights,
+                                 interpret=_use_interpret())
+
+
+def agg_weighted_sum(acc, deltas, weights, *, donate: bool = False):
+    """acc: (n,) fp32; deltas: (C, n); weights: (C,) -> (n,) fp32.
+
+    One dispatch folds C clients.  The micro-batch B is static through the
+    (C, n) shape: a ``LocalAggregator`` flushing at a fixed B compiles
+    exactly one kernel per layout.  ``donate=True`` donates the accumulator
+    (TPU in-place update, no copy); only pass it when no other reference to
+    ``acc`` is live."""
+    global _agg_dispatch_count
+    _agg_dispatch_count += 1
+    fn = _agg_ws_donated if (donate and jax.default_backend() == "tpu") \
+        else _agg_ws
+    return fn(acc, deltas, weights)
+
+
+@jax.jit
+def _agg_ws_staged(acc, staged, weights):
+    return _agg.agg_weighted_sum(acc, jnp.stack(staged), weights,
+                                 interpret=_use_interpret())
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _agg_ws_staged_donated(acc, staged, weights):
+    return _agg.agg_weighted_sum(acc, jnp.stack(staged), weights,
+                                 interpret=_use_interpret())
+
+
+def agg_fold_batch(acc, staged, weights, *, donate: bool = False):
+    """Fused micro-batch flush: stack B staged (n,) client buffers and fold
+    them into the fp32 accumulator with ONE kernel dispatch.  ``staged`` is
+    a tuple of B same-shape buffers (B static through the tuple length), so
+    XLA fuses the stack into the kernel's input and a fixed micro-batch
+    compiles exactly one executable per layout."""
+    global _agg_dispatch_count
+    _agg_dispatch_count += 1
+    fn = _agg_ws_staged_donated if (donate and jax.default_backend() == "tpu") \
+        else _agg_ws_staged
+    return fn(acc, tuple(staged), weights)
+
+
 def agg_fold(acc, delta, weight: float):
     """Fold a single client delta (any pytree leaf shape) into the fp32
-    accumulator — the LocalAggregator fast path."""
+    accumulator.  Legacy per-leaf C=1 path: one dispatch per leaf per
+    client — superseded by the flat-buffer ``LocalAggregator`` micro-batch
+    fold, kept as the bench_aggregation baseline and for ad-hoc folds."""
     flat_acc = acc.reshape(-1).astype(jnp.float32)
     flat_d = delta.reshape(1, -1)
     w = jnp.asarray([weight], jnp.float32)

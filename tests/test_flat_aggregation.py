@@ -1,0 +1,259 @@
+"""Flat-buffer hierarchical aggregation: bit-exact equivalence with the
+reference ``flat_aggregate`` for all four OPs (COLLECT passthrough and mixed
+bf16/fp32 deltas included), layout round-trips, micro-batch flush
+boundaries, and the flat compressor wire format.
+
+Bit-exactness strategy: payloads and weights are small integers, so every
+product and partial sum is exactly representable in fp32 (and bf16) — any
+reordering the batched fold introduces must still produce identical bits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
+                                    flat_aggregate, global_aggregate,
+                                    payload_bytes)
+from repro.core.flat import FlatLayout, is_flat_partial
+
+OPS = {"delta": Op.WEIGHTED_AVG, "tau": Op.AVG, "count": Op.SUM,
+       "trace": Op.COLLECT}
+
+
+def _int_results(n, seed=0):
+    """Integer-valued payloads: mixed bf16/fp32 leaves inside 'delta'."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        out.append(ClientResult(
+            payload={
+                "delta": {
+                    "w": jnp.asarray(rng.integers(-8, 9, size=(4, 3)),
+                                     jnp.bfloat16),
+                    "b": jnp.asarray(rng.integers(-8, 9, size=(5,)),
+                                     jnp.float32),
+                },
+                "tau": jnp.float32(rng.integers(1, 9)),
+                "count": jnp.ones((), jnp.float32),
+                "trace": jnp.asarray(rng.integers(-4, 5, size=(2,)),
+                                     jnp.float32),
+            },
+            ops=OPS, weight=float(rng.integers(1, 16))))
+    return out
+
+
+def _assert_bit_exact(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("K", [1, 2, 3, 5])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_hierarchical_bit_exact_vs_flat(K, use_kernel):
+    """All four OPs, any executor split, kernel and jnp flush paths."""
+    results = _int_results(11)
+    flat = flat_aggregate(results, OPS)
+    aggs = [LocalAggregator(OPS, use_kernel=use_kernel) for _ in range(K)]
+    for i, r in enumerate(results):
+        aggs[i % K].fold(r)
+    hier = global_aggregate([a.partial() for a in aggs], OPS)
+    _assert_bit_exact(flat["delta"], hier["delta"])
+    _assert_bit_exact(flat["tau"], hier["tau"])
+    _assert_bit_exact(flat["count"], hier["count"])
+    # COLLECT passthrough: per-executor concatenation order (executor k's
+    # clients in fold order, executors in partial order), values untouched
+    expect = [r for k in range(K) for i, r in enumerate(results) if i % K == k]
+    assert [w for w, _ in hier["trace"]] == [r.weight for r in expect]
+    for (_, a), r in zip(hier["trace"], expect):
+        _assert_bit_exact(a, r.payload["trace"])
+
+
+@pytest.mark.parametrize("micro_batch", [1, 3, 16, 100])
+def test_micro_batch_boundary_is_invisible(micro_batch):
+    """Flush boundaries (full batches, tails, zero-row padding) must not
+    change a single bit of the aggregate."""
+    results = _int_results(7, seed=3)
+    ref = flat_aggregate(results, OPS)
+    agg = LocalAggregator(OPS, use_kernel=True, micro_batch=micro_batch)
+    for r in results:
+        agg.fold(r)
+    out = global_aggregate([agg.partial()], OPS)
+    _assert_bit_exact(ref["delta"], out["delta"])
+    _assert_bit_exact(ref["tau"], out["tau"])
+    _assert_bit_exact(ref["count"], out["count"])
+
+
+def test_partial_interleaved_with_folds():
+    """partial() mid-stream (flush + accumulator exposure) must not disturb
+    subsequent folds."""
+    results = _int_results(9, seed=4)
+    ref = flat_aggregate(results, OPS)
+    agg = LocalAggregator(OPS, use_kernel=True, micro_batch=4)
+    for i, r in enumerate(results):
+        agg.fold(r)
+        if i % 2 == 0:
+            agg.partial()               # mid-stream snapshot
+    _assert_bit_exact(ref["delta"],
+                      global_aggregate([agg.partial()], OPS)["delta"])
+
+
+def test_layout_flatten_unflatten_roundtrip():
+    results = _int_results(1)
+    payload = results[0].payload
+    layout = FlatLayout.build(OPS, payload)
+    buffers = layout.flatten(payload)
+    back = layout.unflatten({g: b.astype(jnp.float32)
+                             for g, b in buffers.items()})
+    _assert_bit_exact(back["delta"], payload["delta"])
+    _assert_bit_exact(back["tau"], payload["tau"])
+    assert "trace" not in back          # COLLECT never enters the layout
+
+
+def test_group_dtype_follows_leaves():
+    """All-bf16 deltas stay bf16 on the buffer (the bandwidth lever); mixed
+    bf16/fp32 promotes to fp32."""
+    mixed = _int_results(1)[0].payload
+    layout = FlatLayout.build(OPS, mixed)
+    assert layout.group_dtypes["weighted"] == jnp.float32
+    bf16_only = {"delta": {"w": jnp.ones((4, 3), jnp.bfloat16)}}
+    layout2 = FlatLayout.build({"delta": Op.WEIGHTED_AVG}, bf16_only)
+    assert layout2.group_dtypes["weighted"] == jnp.bfloat16
+
+
+def test_flat_partial_memory_is_O_sa():
+    """One buffer per group, size independent of folded client count."""
+    agg = LocalAggregator(OPS, use_kernel=True, micro_batch=4)
+    sizes = []
+    for r in _int_results(10):
+        agg.fold(r)
+        p = agg.partial()
+        assert is_flat_partial(p)
+        sizes.append(payload_bytes(p["sums"]))
+    assert len(set(sizes)) == 1
+
+
+def test_mixed_flat_and_nested_partials_interop():
+    """A hand-built legacy nested partial combines with flat partials."""
+    results = _int_results(6, seed=5)
+    ref = flat_aggregate(results, OPS)
+    agg = LocalAggregator(OPS)
+    for r in results[:4]:
+        agg.fold(r)
+    flat_part = agg.partial()
+    legacy = LocalAggregator(OPS)
+    for r in results[4:]:
+        legacy.fold(r)
+    lp = legacy.partial()
+    from repro.core.flat import to_nested_sums
+    nested_part = dict(lp, sums=to_nested_sums(lp))   # legacy wire format
+    out = global_aggregate([flat_part, nested_part], OPS)
+    _assert_bit_exact(ref["delta"], out["delta"])
+    _assert_bit_exact(ref["count"], out["count"])
+
+
+def test_spmd_flat_matches_host():
+    from repro.comm.collective import spmd_global_aggregate
+    results = _int_results(8, seed=6)
+    aggs = [LocalAggregator(OPS) for _ in range(2)]
+    for i, r in enumerate(results):
+        aggs[i % 2].fold(r)
+    parts = [a.partial() for a in aggs]
+    host = global_aggregate(parts, OPS)
+    spmd = spmd_global_aggregate(parts, OPS, mesh=None)
+    _assert_bit_exact(host["delta"], spmd["delta"])
+    _assert_bit_exact(host["tau"], spmd["tau"])
+
+
+# ---------------------------------------------------------------------------
+# compressors on the flat wire format
+# ---------------------------------------------------------------------------
+
+def test_topk_full_fraction_roundtrips_flat_partial():
+    from repro.core.compression import TopKCompressor
+    agg = LocalAggregator(OPS)
+    for r in _int_results(5, seed=7):
+        agg.fold(r)
+    p = agg.partial()
+    comp = TopKCompressor(fraction=1.0)     # keep everything: lossless
+    wire = comp.compress_partial(p)
+    assert wire["_wire_bytes"] > 0
+    back = comp.decompress_partial(wire)
+    for g, buf in p["sums"]["buffers"].items():
+        np.testing.assert_array_equal(np.asarray(buf),
+                                      np.asarray(back["sums"]["buffers"][g]))
+
+
+def test_topk_compresses_only_target_entry_span():
+    """'delta' spans compress; the co-resident 'count'/'tau' segments of the
+    unit buffer ride raw and survive exactly."""
+    from repro.core.compression import TopKCompressor
+    agg = LocalAggregator(OPS)
+    results = _int_results(5, seed=8)
+    for r in results:
+        agg.fold(r)
+    p = agg.partial()
+    comp = TopKCompressor(fraction=0.2)
+    back = comp.decompress_partial(comp.compress_partial(p))
+    out = global_aggregate([back], OPS)
+    ref = global_aggregate([p], OPS)
+    _assert_bit_exact(ref["tau"], out["tau"])         # untouched entries
+    _assert_bit_exact(ref["count"], out["count"])
+    # compressed delta is sparsified, not dropped
+    assert np.count_nonzero(np.asarray(jax.tree.leaves(out["delta"])[0])) > 0
+
+
+def test_int8_flat_wire_is_4x_smaller():
+    from repro.core.compression import Int8Compressor
+    agg = LocalAggregator({"delta": Op.WEIGHTED_AVG})
+    rng = np.random.default_rng(9)
+    for _ in range(4):
+        agg.fold(ClientResult(
+            {"delta": jnp.asarray(rng.normal(size=(4096,)), jnp.float32)},
+            {"delta": Op.WEIGHTED_AVG}, weight=2.0))
+    p = agg.partial()
+    comp = Int8Compressor()
+    wire = comp.compress_partial(p)
+    dense = payload_bytes(p["sums"])
+    assert wire["_wire_bytes"] < dense / 3.5
+    back = comp.decompress_partial(wire)
+    np.testing.assert_allclose(
+        np.asarray(back["sums"]["buffers"]["weighted"]),
+        np.asarray(p["sums"]["buffers"]["weighted"]),
+        atol=float(np.abs(np.asarray(p["sums"]["buffers"]["weighted"])).max())
+        / 100)
+
+
+# ---------------------------------------------------------------------------
+# kernel tiling (explicit blk sweeps keep multi-block + padding covered now
+# that the wrapper auto-sizes to a single block in interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,blk", [(1000, 256), (65536, 4096), (100001, 8192)])
+@pytest.mark.parametrize("C", [1, 5])
+def test_agg_kernel_explicit_blk_tiling(n, blk, C):
+    from repro.kernels import agg_weighted_sum as ak
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(0)
+    acc = jax.random.normal(key, (n,), jnp.float32)
+    deltas = jax.random.normal(jax.random.fold_in(key, 1), (C, n),
+                               jnp.bfloat16)
+    w = jnp.linspace(0.5, 2.0, C)
+    out = ak.agg_weighted_sum(acc, deltas, w, blk=blk, interpret=True)
+    exp = ref.agg_weighted_sum_ref(acc, deltas, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_dispatch_counter_counts_batched_flushes():
+    from repro.kernels import ops as kops
+    results = _int_results(8, seed=10)
+    slim_ops = {"delta": Op.WEIGHTED_AVG}
+    kops.reset_agg_dispatch_count()
+    agg = LocalAggregator(slim_ops, use_kernel=True, micro_batch=4)
+    for r in results:
+        agg.fold(ClientResult({"delta": r.payload["delta"]}, slim_ops,
+                              r.weight))
+    agg.partial()
+    # 8 clients at B=4 -> exactly 2 dispatches for the whole queue
+    assert kops.agg_dispatch_count() == 2

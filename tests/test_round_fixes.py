@@ -1,0 +1,189 @@
+"""Round-engine regressions: the compression round-trip (aggregate what was
+actually sent over the wire) and speculative straggler backup tasks."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ClientStateManager, ParrotServer, SequentialExecutor,
+                        make_algorithm)
+from repro.data import make_classification_clients
+
+
+def _loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+GRAD_FN = jax.jit(jax.value_and_grad(_loss_fn))
+PARAMS0 = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+
+
+def _data(n=40, seed=1):
+    return make_classification_clients(n, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10,
+                                       seed=seed)
+
+
+def _make_server(data, **kw):
+    algo = make_algorithm("fedavg", GRAD_FN, 0.1)
+    sm = ClientStateManager(tempfile.mkdtemp())
+    execs = [SequentialExecutor(k, algo, state_manager=sm) for k in range(4)]
+    return ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
+                        data_by_client=data, clients_per_round=10, seed=7,
+                        **kw)
+
+
+def _max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# compression round-trip: what is aggregated must be what crossed the wire
+# ---------------------------------------------------------------------------
+
+class _ZeroingCompressor:
+    """Sentinel: the wire copy carries all-zero sums.  If aggregation sees
+    the zeros, the global delta is zero and params cannot move; the old bug
+    aggregated the executor-local (uncompressed) partial instead."""
+
+    def compress_partial(self, partial):
+        out = dict(partial)
+        sums = partial["sums"]
+        out["sums"] = {"__flat__": True,
+                       "buffers": {g: b * 0.0
+                                   for g, b in sums["buffers"].items()}}
+        return out
+
+    def decompress_partial(self, partial):
+        return partial
+
+
+class _ScalingCompressor:
+    """Lossless round-trip marker: compress doubles, decompress halves.
+    Params must land exactly where the uncompressed run lands — only true
+    when decompress is applied to the received wire copy."""
+
+    def compress_partial(self, partial):
+        out = dict(partial)
+        out["sums"] = {"__flat__": True,
+                       "buffers": {g: b * 2.0
+                                   for g, b in partial["sums"]["buffers"].items()}}
+        return out
+
+    def decompress_partial(self, partial):
+        out = dict(partial)
+        out["sums"] = {"__flat__": True,
+                       "buffers": {g: b * 0.5
+                                   for g, b in partial["sums"]["buffers"].items()}}
+        return out
+
+
+def test_compressed_values_reach_aggregation():
+    data = _data()
+    srv = _make_server(data, compressor=_ZeroingCompressor())
+    srv.run_round()
+    assert _max_diff(srv.params, PARAMS0) == 0.0
+
+
+def test_round_trip_decompresses_the_wire_copy():
+    data = _data()
+    srv_c = _make_server(data, compressor=_ScalingCompressor())
+    srv_c.run(2)
+    srv = _make_server(data)
+    srv.run(2)
+    assert _max_diff(srv_c.params, srv.params) < 1e-7
+
+
+def test_topk_error_feedback_stays_in_sync_with_wire():
+    """With the fix, round r+1's transmitted values include round r's
+    residual, so two rounds of fraction-1/2 top-k keep params close to the
+    uncompressed run (error feedback delays, never loses, mass)."""
+    from repro.core.compression import TopKCompressor
+    data = _data()
+    srv_c = _make_server(data, compressor=TopKCompressor(fraction=0.5))
+    srv_c.run(3)
+    assert srv_c.compressor._residual          # residuals actually accrued
+    srv = _make_server(data)
+    srv.run(3)
+    # sparsified aggregation differs from dense but must stay in the same
+    # neighbourhood thanks to error feedback
+    diff = _max_diff(srv_c.params, srv.params)
+    assert 0.0 < diff < 0.05
+
+
+# ---------------------------------------------------------------------------
+# speculative backup tasks
+# ---------------------------------------------------------------------------
+
+def test_backup_tasks_duplicate_but_fold_once():
+    data = _data()
+    srv = _make_server(data, backup_fraction=0.5, warmup_rounds=1)
+    for _ in range(3):
+        m = srv.run_round()
+        # every selected client folds exactly once despite the duplicates
+        assert m.n_clients == 10
+    assert any(m.extra.get("backup_tasks", 0) > 0 for m in srv.history)
+
+
+def test_backup_tasks_do_not_change_the_model():
+    data = _data()
+    srv_b = _make_server(data, backup_fraction=0.5)
+    srv_b.run(3)
+    srv = _make_server(data, backup_fraction=0.0)
+    srv.run(3)
+    assert _max_diff(srv_b.params, srv.params) < 1e-5
+    assert all(m.extra.get("backup_tasks", 0) == 0 for m in srv.history)
+
+
+def test_backup_default_off():
+    data = _data()
+    srv = _make_server(data)
+    srv.run_round()
+    assert srv.history[0].extra["backup_tasks"] == 0.0
+
+
+def test_backup_survives_slow_and_fast_both_failing():
+    """The duplicated tail lives in two queues; if both its executors die in
+    the same round each tail client must still re-run (and fold) exactly
+    once on the survivors."""
+    data = _data()
+    # replicate round 0's plan to learn which executors get the duplicates
+    probe = _make_server(data, backup_fraction=1.0)
+    tasks = probe.select_clients()
+    sched = probe.scheduler.schedule(0, tasks, list(probe.executors))
+    loads = {k: sum(t.n_samples for t in sched.queue(k))
+             for k in probe.executors}
+    slow = max(loads, key=loads.get)
+    fast = min(loads, key=loads.get)
+
+    srv = _make_server(data, backup_fraction=1.0)
+    srv.executors[slow].fail_at = (0, 0)
+    srv.executors[fast].fail_at = (0, 0)
+    m = srv.run_round()
+    assert m.failures == 2 and m.n_executors == 2
+    ref = _make_server(data)
+    ref.run_round()
+    assert _max_diff(srv.params, ref.params) < 1e-5
+
+
+def test_payload_bytes_counts_compressed_wire_partials():
+    """CompressedTensor leaves (str dtype) count at their achieved nbytes —
+    the CollectiveComm accounting path has no try/except around this."""
+    from repro.core.aggregation import payload_bytes
+    from repro.core.compression import TopKCompressor
+    srv = _make_server(data := _data())
+    rep = srv.executors[0].run_queue(
+        0, srv.scheduler.schedule(0, srv.select_clients(),
+                                  [0]).queue(0),
+        srv.algorithm.broadcast_payload(srv.params, srv.server_state),
+        data)
+    wire = TopKCompressor(fraction=0.1).compress_partial(rep.partial)
+    dense = payload_bytes(rep.partial["sums"])
+    compressed = payload_bytes(wire["sums"])
+    assert 0 < compressed < dense

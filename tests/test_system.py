@@ -110,8 +110,12 @@ def test_executor_failure_recovers_and_shrinks_K():
     sm = ClientStateManager(tempfile.mkdtemp())
     execs = [SequentialExecutor(k, algo, state_manager=sm) for k in range(4)]
     execs[2].fail_at = (1, 1)   # dies at round 1, task index 1
+    # warmup_rounds=2 keeps round 1 on the deterministic uniform split, so
+    # executor 2 is guaranteed >= 2 tasks and the injection always fires
+    # (the LPT schedule depends on measured wall times and can starve it)
     srv = ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
-                       data_by_client=data, clients_per_round=10, seed=7)
+                       data_by_client=data, clients_per_round=10, seed=7,
+                       warmup_rounds=2)
     srv.run(3)
     assert srv.history[1].failures == 1
     assert srv.history[2].n_executors == 3
