@@ -17,6 +17,8 @@ Mapping to the paper:
   bench_algorithms  — Fig. 4 (six algorithms: exactness + round times)
   bench_aggregation — flat-buffer batched C=B fold: GB/s + dispatches/client
                       vs the legacy per-leaf C=1 path
+  bench_client_training — compiled client engine: eager vs jit-scan vs
+                      jit-scan+vmap client-steps/sec at B in {1,4,16}
   bench_kernels     — Pallas wrapper micro-timings (plumbing check)
   roofline          — §Roofline terms from the dry-run artifacts
 """
@@ -28,7 +30,8 @@ sys.path.insert(0, "src")
 
 MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
         "bench_memory", "bench_comm", "bench_algorithms",
-        "bench_aggregation", "bench_kernels", "roofline"]
+        "bench_aggregation", "bench_client_training", "bench_kernels",
+        "roofline"]
 
 
 def main(argv=None) -> None:

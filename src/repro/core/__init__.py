@@ -5,6 +5,8 @@
   flat.py                    — flatten-once layout for batched folds
   state_manager.py           — client state manager for stateful FL (§3.4)
   algorithms.py              — 6 FL algorithms over generic pytrees (§5.1)
+  client_step.py             — compiled client-training engine (jit-scan
+                               local SGD, vmapped client blocks)
   executor.py / round.py     — sequential executors + round engine (Alg. 2)
   compression.py             — delta compression (top-k EF / int8)
 """
@@ -13,6 +15,7 @@ from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
 from repro.core.flat import FlatLayout
 from repro.core.algorithms import (ALGORITHMS, ClientData, FLAlgorithm,
                                    make_algorithm)
+from repro.core.client_step import ClientStepEngine, engine_for
 from repro.core.executor import SequentialExecutor
 from repro.core.round import ParrotServer, RoundMetrics, run_flat_reference
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
@@ -21,10 +24,10 @@ from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
 
 __all__ = [
     "ALGORITHMS", "ClientData", "ClientResult", "ClientStateManager",
-    "ClientTask", "FLAlgorithm", "FlatLayout", "LocalAggregator", "Op",
-    "ParrotScheduler",
+    "ClientStepEngine", "ClientTask", "FLAlgorithm", "FlatLayout",
+    "LocalAggregator", "Op", "ParrotScheduler",
     "ParrotServer", "RoundMetrics", "RunRecord", "Schedule",
     "SequentialExecutor", "WorkloadEstimator", "WorkloadModel",
-    "flat_aggregate", "global_aggregate", "make_algorithm", "owner_host",
-    "run_flat_reference",
+    "engine_for", "flat_aggregate", "global_aggregate", "make_algorithm",
+    "owner_host", "run_flat_reference",
 ]

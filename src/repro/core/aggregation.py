@@ -71,6 +71,13 @@ def _flush_jnp(acc, staged, w):
     return acc + jnp.dot(w, jnp.stack(staged).astype(jnp.float32))
 
 
+@jax.jit
+def _fold_stacked_jnp(acc, stacked, w):
+    """Pure-jnp fold of an already-stacked (B, n) block (same contraction
+    as ``_flush_jnp``, minus the stack)."""
+    return acc + jnp.dot(w, stacked.astype(jnp.float32))
+
+
 class LocalAggregator:
     """Per-executor running aggregate (``LocalAggregate`` in Algorithm 2).
 
@@ -112,8 +119,19 @@ class LocalAggregator:
             w = result.weight if op is Op.WEIGHTED_AVG else 1.0
             self._weights[name] = self._weights.get(name, 0.0) + w
             self._counts[name] = self._counts.get(name, 0) + 1
+        self._ensure_acc(payload)
+        for g, buf in self.layout.flatten(payload).items():
+            self._staged[g].append(buf)
+            self._staged_w[g].append(
+                result.weight if g == "weighted" else 1.0)
+        if any(len(s) >= self.micro_batch for s in self._staged.values()):
+            self._flush()
+
+    def _ensure_acc(self, template_payload: Dict[str, Any]) -> None:
+        """Lazily build the layout (from one un-batched template payload)
+        and the per-group accumulators / staging buffers."""
         if self.layout is None:
-            self.layout = FlatLayout.build(self.ops, payload)
+            self.layout = FlatLayout.build(self.ops, template_payload)
         if self._acc is None:
             self._acc = self.layout.zeros()
             self._staged = {g: [] for g in self._acc}
@@ -121,12 +139,46 @@ class LocalAggregator:
             # zero rows that pad the final kernel flush up to B (shared)
             self._pad = {g: jnp.zeros((n,), self.layout.group_dtypes[g])
                          for g, n in self.layout.group_sizes.items()}
-        for g, buf in self.layout.flatten(payload).items():
-            self._staged[g].append(buf)
-            self._staged_w[g].append(
-                result.weight if g == "weighted" else 1.0)
-        if any(len(s) >= self.micro_batch for s in self._staged.values()):
-            self._flush()
+
+    def fold_block(self, stacked: Dict[str, Any],
+                   weights: List[float]) -> None:
+        """Fold a whole vmapped client block at once.
+
+        ``stacked`` maps entry name -> pytree with a leading (B, ...) client
+        axis — exactly what ``ClientStepEngine.run_block`` emits — and
+        ``weights`` holds the B per-client aggregation weights.  Reducible
+        entries flatten to one (B, n) buffer per group
+        (``FlatLayout.flatten_batch``) and fold with ONE C=B dispatch
+        straight into the accumulator; COLLECT entries are sliced out per
+        client, as ``global_aggregate`` expects per-client values."""
+        B = len(weights)
+        self.n_clients += B
+        for name in stacked:
+            op = self.ops[name]
+            if op is Op.COLLECT:
+                rows = stacked[name]
+                lst = self._collected.setdefault(name, [])
+                for i in range(B):
+                    lst.append((weights[i],
+                                jax.tree.map(lambda x: x[i], rows)))
+                continue
+            wtot = float(sum(weights)) if op is Op.WEIGHTED_AVG else float(B)
+            self._weights[name] = self._weights.get(name, 0.0) + wtot
+            self._counts[name] = self._counts.get(name, 0) + B
+        if self.layout is None or self._acc is None:
+            self._ensure_acc({name: jax.tree.map(lambda x: x[0], val)
+                              for name, val in stacked.items()})
+        bufs = self.layout.flatten_batch(stacked)
+        for g, D in bufs.items():
+            w = jnp.asarray(weights if g == "weighted" else [1.0] * B,
+                            jnp.float32)
+            if self.use_kernel:
+                from repro.kernels import ops as kops
+                self._acc[g] = kops.agg_weighted_sum(
+                    self._acc[g], D, w, donate=not self._exposed)
+            else:
+                self._acc[g] = _fold_stacked_jnp(self._acc[g], D, w)
+        self._exposed = False
 
     def _flush(self) -> None:
         """Fold the staged micro-batch: ONE fused C=B dispatch per group."""

@@ -99,6 +99,50 @@ class FLAlgorithm:
                 tau += 1
         return w, tau
 
+    # --- pure per-step form (compiled engine; core/client_step.py) --------
+    #
+    # Each algorithm re-expresses its local update as a pure
+    # ``(carry, batch, mask) -> carry`` function over an explicit carry
+    # pytree (params plus whatever the steps read: the FedProx anchor,
+    # SCAFFOLD variates, the FedDyn corrector, Mime's frozen momentum).
+    # ``mask`` is 1.0 for real steps and 0.0 for the padding steps the
+    # engine appends to bucket scan lengths — a masked step multiplies the
+    # update by zero, so padding is exact.  The engine rolls ``local_step``
+    # into one jitted ``lax.scan`` over all tau = local_epochs x n_batches
+    # steps and vmaps it over blocks of clients; ``client_update`` above
+    # stays as the eager reference path (used by ``run_flat_reference``).
+
+    def init_carry(self, payload: Dict, state: Optional[Pytree]) -> Pytree:
+        return {"w": payload["params"]}
+
+    def step_correction(self, carry: Pytree, g: Pytree) -> Pytree:
+        """Per-step gradient correction (the pure analogue of grad_hook)."""
+        return g
+
+    def local_step(self, carry: Pytree, batch: Any,
+                   mask: jnp.ndarray) -> Pytree:
+        _, g = self.grad_fn(carry["w"], batch)
+        g = self.step_correction(carry, g)
+        # mask is cast to each leaf's dtype (0/1 are exact in any float
+        # dtype): an f32 mask would promote a bf16 carry and break the
+        # scan's carry-type invariant
+        w = jax.tree.map(
+            lambda ww, gg: ww - self.lr * mask.astype(ww.dtype) * gg,
+            carry["w"], g)
+        return dict(carry, w=w)
+
+    def finalize(self, carry: Pytree, payload: Dict, state: Optional[Pytree],
+                 batches: Any, mask: jnp.ndarray
+                 ) -> Tuple[Dict[str, Any], Optional[Pytree]]:
+        """(result payload, new client state) from the final carry — pure;
+        the aggregation weight is applied by the caller."""
+        raise NotImplementedError
+
+    def _tau(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """Real local-step count tau_m = E x n_batches (mask sums the
+        un-padded batches), floored at 1 like the eager ``max(tau, 1)``."""
+        return jnp.maximum(self.local_epochs * jnp.sum(mask), 1.0)
+
 
 # ---------------------------------------------------------------------------
 # Stateless algorithms
@@ -119,6 +163,9 @@ class FedAvg(FLAlgorithm):
     def server_update(self, params, agg, server_state, n_total_clients):
         return tree_add(params, agg["delta"], self.server_lr), server_state
 
+    def finalize(self, carry, payload, state, batches, mask):
+        return {"delta": tree_sub(carry["w"], payload["params"])}, None
+
 
 class FedProx(FedAvg):
     name = "fedprox"
@@ -138,6 +185,13 @@ class FedProx(FedAvg):
         delta = tree_sub(w, anchor)
         return ClientResult({"delta": delta}, self.ops(),
                             weight=float(data.n_samples)), None
+
+    def init_carry(self, payload, state):
+        return {"w": payload["params"], "anchor": payload["params"]}
+
+    def step_correction(self, carry, g):  # g + mu * (w - w_global)
+        return jax.tree.map(lambda gg, ww, aa: gg + self.mu * (ww - aa),
+                            g, carry["w"], carry["anchor"])
 
 
 class FedNova(FLAlgorithm):
@@ -162,6 +216,13 @@ class FedNova(FLAlgorithm):
         new = tree_add(params, tree_scale(agg["norm_delta"], tau_eff),
                        self.server_lr)
         return new, server_state
+
+    def finalize(self, carry, payload, state, batches, mask):
+        tau = self._tau(mask)     # traced f32: cast back to the leaf dtype
+        delta = tree_sub(carry["w"], payload["params"])
+        return {"norm_delta": jax.tree.map(
+                    lambda d: (d / tau).astype(d.dtype), delta),
+                "tau": jnp.asarray(tau, jnp.float32)}, None
 
 
 class Mime(FLAlgorithm):
@@ -207,16 +268,44 @@ class Mime(FLAlgorithm):
 
     def server_update(self, params, agg, server_state, n_total_clients):
         grads = agg["full_grad"]                  # list of (weight, pytree)
-        wsum = sum(w for w, _ in grads)
-        gavg = None
-        for w, g in grads:
-            gavg = tree_scale(g, w / wsum) if gavg is None \
-                else tree_add(gavg, g, w / wsum)
+        # one stacked (M_p, ...) weighted average per leaf instead of a
+        # per-client python loop over every leaf on the server path
+        ws = jnp.asarray([w for w, _ in grads], jnp.float32)
+        ws = ws / jnp.maximum(jnp.sum(ws), 1e-12)
+        gavg = jax.tree.map(
+            lambda *leaves: jnp.tensordot(ws, jnp.stack(leaves), axes=1),
+            *[g for _, g in grads])
+        # cast back to the momentum dtype: the f32 tensordot must not
+        # promote a bf16 momentum (next round's scan carry would mismatch)
         mom = jax.tree.map(
-            lambda m, g: self.beta * m + (1 - self.beta) * g,
+            lambda m, g: (self.beta * m + (1 - self.beta) * g)
+            .astype(m.dtype),
             server_state["momentum"], gavg)
         new = tree_add(params, agg["delta"], self.server_lr)
         return new, {"momentum": mom}
+
+    def init_carry(self, payload, state):
+        return {"w": payload["params"], "momentum": payload["momentum"]}
+
+    def step_correction(self, carry, g):  # momentum frozen locally
+        return jax.tree.map(
+            lambda gg, mm: (1 - self.beta) * gg + self.beta * mm,
+            g, carry["momentum"])
+
+    def finalize(self, carry, payload, state, batches, mask):
+        params0 = payload["params"]
+
+        def acc(gs, xs):  # full-batch gradient at the *global* params
+            b, m = xs
+            _, g = self.grad_fn(params0, b)
+            return jax.tree.map(lambda s, gg: s + m.astype(s.dtype) * gg,
+                                gs, g), None
+
+        gsum, _ = jax.lax.scan(acc, tree_zeros_like(params0), (batches, mask))
+        n = jnp.maximum(jnp.sum(mask), 1.0)
+        full_grad = jax.tree.map(lambda s: (s / n).astype(s.dtype), gsum)
+        return {"delta": tree_sub(carry["w"], params0),
+                "full_grad": full_grad}, None
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +354,25 @@ class Scaffold(FLAlgorithm):
         c = tree_add(server_state["c"], agg["delta_c"], frac)
         return new, {"c": c}
 
+    def init_carry(self, payload, state):
+        return {"w": payload["params"], "c": payload["c"],
+                "c_m": state["c_m"]}
+
+    def step_correction(self, carry, g):  # g - c_m + c
+        return jax.tree.map(lambda gg, cm, cc: gg - cm + cc,
+                            g, carry["c_m"], carry["c"])
+
+    def finalize(self, carry, payload, state, batches, mask):
+        anchor, w = payload["params"], carry["w"]
+        c, c_m = carry["c"], carry["c_m"]
+        tau = self._tau(mask)     # traced f32: cast back to the leaf dtype
+        c_m_new = jax.tree.map(
+            lambda cm, cc, aa, ww:
+                (cm - cc + (aa - ww) / (tau * self.lr)).astype(cm.dtype),
+            c_m, c, anchor, w)
+        return ({"delta": tree_sub(w, anchor),
+                 "delta_c": tree_sub(c_m_new, c_m)}, {"c_m": c_m_new})
+
 
 class FedDyn(FLAlgorithm):
     """FedDyn (Acar et al., 2021): clients keep the gradient of their local
@@ -309,6 +417,21 @@ class FedDyn(FLAlgorithm):
         h = tree_add(server_state["h"], agg["delta"], -self.alpha * frac)
         new = tree_add(params, agg["delta"], self.server_lr * (1.0 + frac))
         return new, {"h": h}
+
+    def init_carry(self, payload, state):
+        return {"w": payload["params"], "anchor": payload["params"],
+                "grad_corr": state["grad_corr"]}
+
+    def step_correction(self, carry, g):  # g + alpha * (w - anchor) - h
+        return jax.tree.map(
+            lambda gg, ww, aa, hh: gg + self.alpha * (ww - aa) - hh,
+            g, carry["w"], carry["anchor"], carry["grad_corr"])
+
+    def finalize(self, carry, payload, state, batches, mask):
+        anchor, w = payload["params"], carry["w"]
+        gc_new = jax.tree.map(lambda hh, ww, aa: hh - self.alpha * (ww - aa),
+                              state["grad_corr"], w, anchor)
+        return {"delta": tree_sub(w, anchor)}, {"grad_corr": gc_new}
 
 
 ALGORITHMS = {

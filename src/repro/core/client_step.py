@@ -1,0 +1,226 @@
+"""Compiled client-training engine — the simulator's true hot path.
+
+``FLAlgorithm.client_update`` (the eager reference path, kept and used by
+``run_flat_reference``) dispatches one un-jitted op per pytree leaf per SGD
+step per client; simulating 1000 clients is then dominated by Python/XLA
+dispatch overhead rather than FLOPs.  ``ClientStepEngine`` instead rolls each
+algorithm's pure ``(carry, batch, mask) -> carry`` step (see
+``FLAlgorithm.local_step``) into ONE ``jax.jit``-compiled ``lax.scan`` over
+all tau = local_epochs x n_batches local steps — one dispatch per client —
+and additionally ``vmap``s that scan over a block of B same-shape clients —
+one dispatch per block — producing stacked ``(B, ...)`` deltas that feed the
+flat-buffer aggregator directly (``LocalAggregator.fold_block``), with no
+per-client unflatten/refold round-trip through ``ClientResult``.
+
+Shape discipline (bounded compile count): per-client batch counts and block
+sizes are padded up to the next power of two — batches with repeats of the
+client's first batch plus a 0/1 step mask, blocks with replicas of the first
+client whose outputs are sliced off.  A masked step multiplies the update by
+zero, so padding is *exact*; jit then caches one executable per (algorithm,
+payload shapes, batch bucket[, block bucket]) instead of one per raw
+(n_batches, B) pair.  On accelerator backends the stacked-batch and mask
+arguments are donated (they are rebuilt per call) and the scan carry is
+donated by XLA internally; on CPU donation is skipped (it would only warn).
+
+Clients whose batches are ragged (shapes differ within one client) cannot be
+scanned; the engine transparently falls back to the eager reference path for
+exactly those clients.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import ClientResult
+from repro.core.algorithms import ClientData, FLAlgorithm
+
+Pytree = Any
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (n >= 1) — the scan-length / block bucket."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+# Process-wide XLA compile counter.  Executors snapshot it around a timed
+# block: if it advanced, the block's wall time paid a one-off compile
+# (engine scan, flatten_batch, fold — any jit anywhere in the region) and
+# the measurement is re-taken from the warm caches so virtual time reflects
+# steady-state throughput.
+_compile_events = 0
+
+
+def _on_compile_event(event: str, duration: float, **kw) -> None:
+    global _compile_events
+    if event.startswith("/jax/core/compile"):
+        _compile_events += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_on_compile_event)
+
+
+def compile_events() -> int:
+    """Monotonic count of XLA compile events in this process."""
+    return _compile_events
+
+
+def batch_signature(data: ClientData) -> Optional[Tuple]:
+    """Hashable grouping key for cross-client blocking: clients with equal
+    signatures stack into one vmapped scan.  The batch count enters through
+    its power-of-two bucket (mask padding makes unequal counts compatible).
+    Returns None when the client's batches are ragged (eager fallback)."""
+    bs = data.batches
+    if not bs:
+        return None
+    treedef = jax.tree.structure(bs[0])
+    shapes = tuple((tuple(np.shape(l)), str(getattr(l, "dtype", "?")))
+                   for l in jax.tree.leaves(bs[0]))
+    for b in bs[1:]:
+        if jax.tree.structure(b) != treedef:
+            return None
+        if tuple((tuple(np.shape(l)), str(getattr(l, "dtype", "?")))
+                 for l in jax.tree.leaves(b)) != shapes:
+            return None
+    return (_bucket(len(bs)), treedef, shapes)
+
+
+def stack_batches(data: ClientData, *, assume_uniform: bool = False
+                  ) -> Optional[Tuple[Any, np.ndarray]]:
+    """One leading-axis batch pytree + 0/1 step mask for a client, padded to
+    the power-of-two bucket with repeats of the first batch (finite data, so
+    the masked zero-update is exact).  None when the batches are ragged.
+
+    ``assume_uniform=True`` skips the ragged check when the caller already
+    grouped clients by :func:`batch_signature` (the executor's block
+    planner) — the signature walk is O(n_batches x n_leaves) per client and
+    would otherwise run twice per round on the hot path."""
+    if not assume_uniform and batch_signature(data) is None:
+        return None
+    bs = data.batches
+    n, n_pad = len(bs), _bucket(len(bs))
+    padded = list(bs) + [bs[0]] * (n_pad - n)
+    stacked = jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                           *padded)
+    mask = np.zeros((n_pad,), np.float32)
+    mask[:n] = 1.0
+    return stacked, mask
+
+
+class ClientStepEngine:
+    """One compiled scan (and its vmapped block form) per algorithm.
+
+    jax.jit owns the executable cache: one entry per distinct (payload
+    shapes, state shapes, batch bucket) for the single-client scan, plus one
+    per block bucket for the vmapped form — cached across rounds and
+    clients.  Executors sharing an algorithm instance share the engine (and
+    therefore the cache) through :func:`engine_for`.
+    """
+
+    def __init__(self, algorithm: FLAlgorithm):
+        self.algorithm = algorithm
+        self.n_dispatches = 0       # compiled calls issued (bench metric)
+        donate = jax.default_backend() in ("tpu", "gpu")
+        kw = dict(donate_argnums=(2, 3)) if donate else {}
+        self._run_jit = jax.jit(self._run_one, **kw)
+        self._run_block_jit = jax.jit(
+            jax.vmap(self._run_one, in_axes=(None, 0, 0, 0)), **kw)
+
+    # ------------------------------------------------------------------
+    def _run_one(self, payload: Dict, state: Optional[Pytree], batches: Any,
+                 mask: jnp.ndarray) -> Tuple[Dict[str, Any], Optional[Pytree]]:
+        """The whole local update as one traced program: init carry, scan
+        tau steps, finalize.  Shapes only — jit/vmap do the rest."""
+        algo = self.algorithm
+        carry = algo.init_carry(payload, state)
+
+        def step(c, xs):
+            b, m = xs
+            return algo.local_step(c, b, m), None
+
+        def epoch(c, _):
+            c, _ = jax.lax.scan(step, c, (batches, mask))
+            return c, None
+
+        # length=0 is a valid no-op scan, matching the eager path's zero
+        # local steps for local_epochs=0
+        carry, _ = jax.lax.scan(epoch, carry, None, length=algo.local_epochs)
+        return algo.finalize(carry, payload, state, batches, mask)
+
+    # ------------------------------------------------------------------
+    def run_client(self, payload: Dict, data: ClientData,
+                   state: Optional[Pytree] = None, *,
+                   assume_uniform: bool = False
+                   ) -> Tuple[ClientResult, Optional[Pytree]]:
+        """Compiled drop-in for ``algorithm.client_update``: one dispatch for
+        the whole tau-step local update (eager fallback on ragged batches;
+        ``assume_uniform=True`` skips the ragged walk when the caller
+        already checked the signature)."""
+        prep = stack_batches(data, assume_uniform=assume_uniform)
+        if prep is None:
+            return self.algorithm.client_update(payload, data, state)
+        batches, mask = prep
+        self.n_dispatches += 1
+        out_payload, new_state = self._run_jit(payload, state, batches,
+                                               jnp.asarray(mask))
+        return (ClientResult(out_payload, self.algorithm.ops(),
+                             weight=float(data.n_samples)), new_state)
+
+    def run_block(self, payload: Dict, datas: Sequence[ClientData],
+                  states: Optional[Sequence[Pytree]] = None
+                  ) -> Tuple[Dict[str, Any], Optional[List[Pytree]]]:
+        """One vmapped compiled scan over a block of B same-signature
+        clients (the caller groups by :func:`batch_signature`).  Returns the
+        stacked result payload (leading B axis, ready for
+        ``LocalAggregator.fold_block``) and the per-client new states.
+
+        The block is padded to the power-of-two bucket with replicas of the
+        first client; padded rows are sliced off before returning, so the
+        caller never sees them."""
+        B = len(datas)
+        B_pad = _bucket(B)
+        try:
+            preps = [stack_batches(d, assume_uniform=True) for d in datas]
+            preps = preps + [preps[0]] * (B_pad - B)
+            batches = jax.tree.map(lambda *xs: np.stack(xs),
+                                   *[p[0] for p in preps])
+            mask = np.stack([p[1] for p in preps])
+        except ValueError as e:
+            raise ValueError("ragged or mixed-shape client batches cannot "
+                             "be blocked; group by batch_signature() first"
+                             ) from e
+        sstates = None
+        if states is not None:
+            padded = list(states) + [states[0]] * (B_pad - B)
+            sstates = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+        self.n_dispatches += 1
+        out_payload, new_states = self._run_block_jit(
+            payload, sstates, batches, jnp.asarray(mask))
+        if B_pad > B:
+            out_payload = jax.tree.map(lambda x: x[:B], out_payload)
+        if states is None:
+            return out_payload, None
+        return out_payload, [jax.tree.map(lambda x: x[i], new_states)
+                             for i in range(B)]
+
+    # ------------------------------------------------------------------
+    def compile_count(self) -> int:
+        """Executables compiled so far (scan + vmapped scan caches)."""
+        total = 0
+        for fn in (self._run_jit, self._run_block_jit):
+            size = getattr(fn, "_cache_size", None)
+            if callable(size):
+                total += size()
+        return total
+
+
+def engine_for(algorithm: FLAlgorithm) -> ClientStepEngine:
+    """The algorithm instance's engine (executors sharing the algorithm
+    share one compile cache)."""
+    eng = getattr(algorithm, "_step_engine", None)
+    if eng is None:
+        eng = ClientStepEngine(algorithm)
+        algorithm._step_engine = eng
+    return eng

@@ -85,6 +85,7 @@ class FlatLayout:
         self.group_dtypes = group_dtypes    # group  -> buffer dtype
         self.entry_order = entry_order      # group  -> entry names in order
         self._flatten_jit = None            # compiled once per layout
+        self._flatten_batch_jit = None      # compiled once per layout
 
     # ------------------------------------------------------------------
     @classmethod
@@ -140,6 +141,18 @@ class FlatLayout:
             self._flatten_jit = jax.jit(self._flatten_impl)
         return self._flatten_jit(payload)
 
+    def flatten_batch(self, payload: Dict[str, Any]
+                      ) -> Dict[str, jnp.ndarray]:
+        """(B, n) group buffers from a payload with a leading client axis —
+        the vmapped-client-engine analogue of ``flatten``: one fused
+        dispatch flattens a whole block, and the result folds directly with
+        a single C=B kernel call (no per-client unflatten/refold).  The
+        batched form is literally ``vmap(_flatten_impl)``, so the two paths
+        cannot drift apart."""
+        if self._flatten_batch_jit is None:
+            self._flatten_batch_jit = jax.jit(jax.vmap(self._flatten_impl))
+        return self._flatten_batch_jit(payload)
+
     def zeros(self) -> Dict[str, jnp.ndarray]:
         """Fresh fp32 accumulators, one per group (the O(s_a) partial)."""
         return {g: jnp.zeros((n,), jnp.float32)
@@ -179,6 +192,7 @@ class FlatLayout:
     def __getstate__(self):
         state = dict(self.__dict__)
         state["_flatten_jit"] = None
+        state["_flatten_batch_jit"] = None
         return state
 
 

@@ -126,6 +126,22 @@ class ClientStateManager:
                 return tree
             return default
 
+    def save_many(self, states: Dict[int, Any]) -> None:
+        """Batched ``Save_State`` for a block of B clients (one lock trip —
+        the compiled-engine executor writes a whole vmapped block back in
+        one call; the RLock makes the nested per-client saves free)."""
+        with self._lock:
+            for client, state in states.items():
+                self.save(client, state)
+
+    def load_many(self, clients: Iterable[int],
+                  default: Any = None) -> List[Any]:
+        """Batched ``Load_State``: one state per client, in order, under a
+        single lock acquisition (the executor stacks the results for the
+        vmapped scan)."""
+        with self._lock:
+            return [self.load(client, default) for client in clients]
+
     def __contains__(self, client: int) -> bool:
         return client in self._mem or client in self._on_disk
 

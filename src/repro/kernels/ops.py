@@ -67,8 +67,10 @@ def _agg_ws_donated(acc, deltas, weights):
 def agg_weighted_sum(acc, deltas, weights, *, donate: bool = False):
     """acc: (n,) fp32; deltas: (C, n); weights: (C,) -> (n,) fp32.
 
-    One dispatch folds C clients.  The micro-batch B is static through the
-    (C, n) shape: a ``LocalAggregator`` flushing at a fixed B compiles
+    One dispatch folds C clients — both for restacked micro-batches and for
+    the already-stacked (B, n) buffers the vmapped client engine emits
+    (``LocalAggregator.fold_block``).  The micro-batch B is static through
+    the (C, n) shape: a ``LocalAggregator`` flushing at a fixed B compiles
     exactly one kernel per layout.  ``donate=True`` donates the accumulator
     (TPU in-place update, no copy); only pass it when no other reference to
     ``acc`` is live."""

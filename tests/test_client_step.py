@@ -1,0 +1,259 @@
+"""Compiled client-training engine ⟷ eager reference equivalence.
+
+The acceptance bar for ``core/client_step.py``: the jit-scanned step form
+must reproduce the eager ``client_update`` (all six algorithms, including
+mask-padded non-power-of-two batch counts), the vmapped block form must
+reproduce the single-client form row by row, and a blocked end-to-end
+ParrotServer round (B>1) must match both B=1 and ``run_flat_reference`` —
+with SCAFFOLD/FedDyn state round-tripping through the state manager.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClientData, ClientStateManager, LocalAggregator, Op,
+                        ParrotServer, SequentialExecutor, engine_for,
+                        make_algorithm, run_flat_reference)
+from repro.core.client_step import batch_signature, stack_batches
+from repro.data import make_classification_clients
+
+ALGOS = ["fedavg", "fedprox", "fednova", "mime", "scaffold", "feddyn"]
+
+
+def _loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+GRAD_FN = jax.jit(jax.value_and_grad(_loss_fn))
+PARAMS0 = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+
+
+def _client(n_batches, bs=10, seed=0):
+    rng = np.random.default_rng(seed)
+    batches = [{"x": rng.normal(size=(bs, 8)).astype(np.float32),
+                "y": rng.integers(0, 4, size=(bs,)).astype(np.int32)}
+               for _ in range(n_batches)]
+    return ClientData(batches=batches, n_samples=n_batches * bs)
+
+
+def _max_diff(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    return max(float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                     - jnp.asarray(y, jnp.float32))))
+               for x, y in zip(leaves_a, leaves_b))
+
+
+def _setup(name, local_epochs=2):
+    algo = make_algorithm(name, GRAD_FN, 0.1, local_epochs=local_epochs)
+    server_state = algo.server_init(PARAMS0)
+    payload = algo.broadcast_payload(PARAMS0, server_state)
+    state = algo.client_init_state(PARAMS0) if algo.stateful else None
+    return algo, payload, state
+
+
+# ---------------------------------------------------------------------------
+# compiled scan vs eager client_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALGOS)
+@pytest.mark.parametrize("n_batches", [1, 3, 4])   # 3: mask-padded bucket
+def test_compiled_scan_matches_eager(name, n_batches):
+    algo, payload, state = _setup(name)
+    data = _client(n_batches, seed=n_batches)
+    res_e, state_e = algo.client_update(payload, data, state)
+    res_c, state_c = engine_for(algo).run_client(payload, data, state)
+    assert set(res_c.payload) == set(res_e.payload)
+    assert res_c.weight == res_e.weight
+    for entry in res_e.payload:
+        assert _max_diff(res_e.payload[entry], res_c.payload[entry]) < 1e-6
+    if algo.stateful:
+        assert _max_diff(state_e, state_c) < 1e-6
+    else:
+        assert state_c is None
+
+
+@pytest.mark.parametrize("name", ["fedavg", "scaffold"])
+def test_ragged_batches_fall_back_to_eager(name):
+    algo, payload, state = _setup(name)
+    data = ClientData(batches=[
+        {"x": np.zeros((10, 8), np.float32), "y": np.zeros((10,), np.int32)},
+        {"x": np.zeros((7, 8), np.float32), "y": np.zeros((7,), np.int32)},
+    ], n_samples=17)
+    assert batch_signature(data) is None
+    assert stack_batches(data) is None
+    res_e, _ = algo.client_update(payload, data, state)
+    res_c, _ = engine_for(algo).run_client(payload, data, state)
+    for entry in res_e.payload:
+        assert _max_diff(res_e.payload[entry], res_c.payload[entry]) == 0.0
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fednova", "mime", "scaffold"])
+def test_compiled_scan_handles_bf16_params(name):
+    """The f32 step mask must not promote a bf16 carry (scan's carry-type
+    invariant) — and results must stay close to the eager reference."""
+    params = {"w": jnp.zeros((8, 4), jnp.bfloat16),
+              "b": jnp.zeros((4,), jnp.bfloat16)}
+    algo = make_algorithm(name, GRAD_FN, 0.1, local_epochs=1)
+    payload = algo.broadcast_payload(params, algo.server_init(params))
+    state = algo.client_init_state(params) if algo.stateful else None
+    data = _client(3, seed=5)
+    res_e, _ = algo.client_update(payload, data, state)
+    res_c, _ = engine_for(algo).run_client(payload, data, state)
+    for entry in res_e.payload:
+        for le, lc in zip(jax.tree.leaves(res_e.payload[entry]),
+                          jax.tree.leaves(res_c.payload[entry])):
+            assert lc.dtype == le.dtype
+        assert _max_diff(res_e.payload[entry], res_c.payload[entry]) < 1e-2
+
+
+def test_bf16_mime_survives_multiple_rounds():
+    """server_update must not promote the broadcast momentum to f32 — the
+    round-2 compiled scan would hit a carry-dtype mismatch."""
+    params = {"w": jnp.zeros((8, 4), jnp.bfloat16),
+              "b": jnp.zeros((4,), jnp.bfloat16)}
+    data = {c: _client(3, seed=30 + c) for c in range(8)}
+    algo = make_algorithm("mime", GRAD_FN, 0.1, local_epochs=1)
+    sm = ClientStateManager(tempfile.mkdtemp())
+    execs = [SequentialExecutor(k, algo, state_manager=sm, client_block=4)
+             for k in range(2)]
+    srv = ParrotServer(params=params, algorithm=algo, executors=execs,
+                       data_by_client=data, clients_per_round=6, seed=7)
+    srv.run(3)
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree.leaves(srv.server_state["momentum"]))
+
+
+def test_signature_buckets_batch_counts():
+    # 3 and 4 batches share the bucket-4 signature; 5 does not
+    assert batch_signature(_client(3)) == batch_signature(_client(4))
+    assert batch_signature(_client(3)) != batch_signature(_client(5))
+
+
+# ---------------------------------------------------------------------------
+# vmapped block vs single-client scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALGOS)
+def test_vmapped_block_matches_single(name):
+    algo, payload, _ = _setup(name)
+    # 5 clients forces block padding to the bucket of 8; mixed 3/4-batch
+    # clients share a bucket through mask padding
+    datas = [_client(3 + (i % 2), seed=10 + i) for i in range(5)]
+    states = [algo.client_init_state(PARAMS0) for _ in datas] \
+        if algo.stateful else None
+    eng = engine_for(algo)
+    stacked, new_states = eng.run_block(payload, datas, states)
+    for i, data in enumerate(datas):
+        res_1, state_1 = eng.run_client(
+            payload, data, states[i] if states else None)
+        row = {k: jax.tree.map(lambda x: x[i], v) for k, v in stacked.items()}
+        for entry in res_1.payload:
+            assert _max_diff(res_1.payload[entry], row[entry]) < 1e-6
+        if algo.stateful:
+            assert _max_diff(state_1, new_states[i]) < 1e-6
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_fold_block_matches_per_client_folds(use_kernel):
+    """LocalAggregator.fold_block == B eager folds (same contraction)."""
+    algo, payload, _ = _setup("mime")   # WEIGHTED_AVG delta + COLLECT grads
+    datas = [_client(4, seed=20 + i) for i in range(4)]
+    eng = engine_for(algo)
+    ops = algo.ops()
+    agg_a = LocalAggregator(ops, use_kernel=use_kernel)
+    stacked, _ = eng.run_block(payload, datas)
+    weights = [float(d.n_samples) for d in datas]
+    agg_a.fold_block(stacked, weights)
+    agg_b = LocalAggregator(ops, use_kernel=use_kernel)
+    for d in datas:
+        res, _ = eng.run_client(payload, d)
+        agg_b.fold(res)
+    pa, pb = agg_a.partial(), agg_b.partial()
+    assert pa["n_clients"] == pb["n_clients"] == 4
+    assert pa["weights"] == pb["weights"]
+    assert pa["counts"] == pb["counts"]
+    for g in pb["sums"]["buffers"]:
+        assert _max_diff(pa["sums"]["buffers"][g],
+                         pb["sums"]["buffers"][g]) < 1e-6
+    # COLLECT extraction from the vmapped output: per-client (w, pytree)
+    assert len(pa["collected"]["full_grad"]) == 4
+    for (wa, ga), (wb, gb) in zip(pa["collected"]["full_grad"],
+                                  pb["collected"]["full_grad"]):
+        assert wa == wb
+        assert _max_diff(ga, gb) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: blocked rounds vs B=1 vs flat reference
+# ---------------------------------------------------------------------------
+
+def _run_server(name, data, client_block, budget=1 << 30, use_kernel=False):
+    algo = make_algorithm(name, GRAD_FN, 0.1, local_epochs=2)
+    sm = ClientStateManager(tempfile.mkdtemp(),
+                            memory_budget_bytes=budget)
+    execs = [SequentialExecutor(k, algo, state_manager=sm,
+                                client_block=client_block,
+                                use_agg_kernel=use_kernel)
+             for k in range(4)]
+    srv = ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
+                       data_by_client=data, clients_per_round=10, seed=7)
+    srv.run(3)
+    return srv
+
+
+@pytest.mark.parametrize("name", ALGOS)
+def test_blocked_round_matches_flat_reference(name):
+    data = make_classification_clients(40, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10, seed=1)
+    flat, _ = run_flat_reference(
+        PARAMS0, make_algorithm(name, GRAD_FN, 0.1, local_epochs=2),
+        data, clients_per_round=10, n_rounds=3, seed=7)
+    srv_b1 = _run_server(name, data, client_block=1)
+    srv_b16 = _run_server(name, data, client_block=16)
+    assert _max_diff(flat, srv_b1.params) < 1e-5
+    assert _max_diff(flat, srv_b16.params) < 1e-5
+    assert _max_diff(srv_b1.params, srv_b16.params) < 1e-6
+
+
+@pytest.mark.parametrize("name", ["scaffold", "feddyn"])
+def test_blocked_stateful_state_roundtrip_through_manager(name):
+    """Blocked runs must load/save the SAME per-client states the eager
+    path does — even when a tiny budget spills every state to disk."""
+    data = make_classification_clients(30, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10, seed=2)
+    srv_spill = _run_server(name, data, client_block=16, budget=1024)
+    srv_eager = _run_server(name, data, client_block=1, budget=1 << 30)
+    assert _max_diff(srv_spill.params, srv_eager.params) < 1e-5
+    sm = next(iter(srv_spill.executors.values())).state_manager
+    assert sm.stats["spills"] > 0 and sm.stats["loads"] > 0
+    # states landed per client, not per block
+    assert len(sm.known_clients()) > 0
+
+
+def test_blocked_round_with_agg_kernel():
+    data = make_classification_clients(30, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10, seed=3)
+    srv_k = _run_server("fedavg", data, client_block=8, use_kernel=True)
+    srv_j = _run_server("fedavg", data, client_block=8, use_kernel=False)
+    assert _max_diff(srv_k.params, srv_j.params) < 1e-6
+
+
+def test_engine_dispatch_counts_drop_with_blocking():
+    """One compiled dispatch per block, not per client."""
+    algo, payload, _ = _setup("fedavg")
+    datas = [_client(4, seed=40 + i) for i in range(8)]
+    eng = engine_for(algo)
+    before = eng.n_dispatches
+    eng.run_block(payload, datas)
+    assert eng.n_dispatches == before + 1
+    for d in datas:
+        eng.run_client(payload, d)
+    assert eng.n_dispatches == before + 1 + len(datas)

@@ -24,6 +24,19 @@ def test_save_load_roundtrip():
             np.testing.assert_array_equal(st["c"], _state(i)["c"])
 
 
+def test_batched_save_load_many_roundtrip():
+    """save_many/load_many (the compiled-engine block path) must behave
+    exactly like per-client save/load, order included, with spill."""
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d, memory_budget_bytes=1024)  # forces spill
+        sm.save_many({i: _state(i) for i in range(12)})
+        out = sm.load_many([7, 3, 11, 0])
+        for client, st in zip([7, 3, 11, 0], out):
+            np.testing.assert_array_equal(st["c"], _state(client)["c"])
+        assert sm.load_many([99], default="missing") == ["missing"]
+        assert sm.stats["spills"] > 0
+
+
 def test_memory_budget_enforced_with_spill():
     with tempfile.TemporaryDirectory() as d:
         budget = 5 * 420  # ~5 states
