@@ -1,0 +1,65 @@
+"""Round-engine mode comparison (DESIGN.md §3): simulated makespan and wall
+time for bsp / semi-sync / async under ``dynamic_env`` heterogeneity
+(K=4 executors, 64 clients per round), plus final eval loss so throughput
+wins can't hide convergence regressions.
+
+Acceptance targets (ISSUE 3): async mean makespan >= 25% below bsp while
+its final-round eval loss stays within 5% of the BSP run's.
+
+``BENCH_ROUND_MODES_ROUNDS`` overrides the round count (CI smoke runs few).
+"""
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.executor import dynamic_env
+
+ROUNDS = int(os.environ.get("BENCH_ROUND_MODES_ROUNDS", "16"))
+SKIP = max(2, ROUNDS // 5)          # estimator warm-up rounds to discard
+K = 4
+CLIENTS_PER_ROUND = 64
+
+MODES = [
+    ("bsp", "bsp", {}),
+    ("semi_sync", "semi-sync", {"deadline_frac": 0.55, "over_select": 1.2,
+                                "chunk_size": 4}),
+    ("async", "async", {"staleness_lambda": 0.5, "chunk_size": 8}),
+]
+
+
+def _run_mode(engine, opts):
+    srv = common.build_server(
+        n_clients=160, clients_per_round=CLIENTS_PER_ROUND, K=K,
+        speed_model=dynamic_env(K, ROUNDS), warmup_rounds=2,
+        round_engine=engine, engine_opts=opts)
+    t0 = time.perf_counter()
+    metrics = [srv.run_round() for _ in range(ROUNDS)]
+    wall = time.perf_counter() - t0
+    makespans = [m.makespan for m in metrics][SKIP:]
+    return {
+        "makespan_s": float(np.mean(makespans)),
+        "wall_s": wall,
+        "loss": common.eval_loss(srv),
+        "trips": int(np.mean([m.comm_trips for m in metrics])),
+    }
+
+
+def run() -> None:
+    results = {}
+    for name, engine, opts in MODES:
+        r = _run_mode(engine, opts)
+        results[name] = r
+        common.emit(f"round_modes/{name}/makespan", r["makespan_s"] * 1e6,
+                    f"loss={r['loss']:.4f} wall_s={r['wall_s']:.2f} "
+                    f"trips={r['trips']}")
+    bsp = results["bsp"]
+    for name in ("semi_sync", "async"):
+        r = results[name]
+        red = 100.0 * (1.0 - r["makespan_s"] / max(bsp["makespan_s"], 1e-12))
+        # signed: negative = converged *better* than BSP at equal rounds
+        dloss = 100.0 * (r["loss"] - bsp["loss"]) / max(bsp["loss"], 1e-12)
+        common.emit(f"round_modes/{name}/vs_bsp", red,
+                    f"makespan_reduction_pct={red:.1f} "
+                    f"loss_delta_pct={dloss:+.2f}")

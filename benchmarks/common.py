@@ -68,7 +68,8 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                  algorithm="fedavg", scheduler="parrot", time_window=0,
                  speed_model: SpeedModel = homogeneous, partition="natural",
                  partition_arg=5.0, compressor=None, seed=0, local_epochs=1,
-                 warmup_rounds=1) -> ParrotServer:
+                 warmup_rounds=1, round_engine="bsp",
+                 engine_opts=None) -> ParrotServer:
     data = make_classification_clients(
         n_clients, dim=32, n_classes=10, partition=partition,
         partition_arg=partition_arg, mean_samples=60, batch_size=20,
@@ -82,7 +83,20 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                         clients_per_round=clients_per_round,
                         scheduler_policy=scheduler, time_window=time_window,
                         warmup_rounds=warmup_rounds, compressor=compressor,
+                        round_engine=round_engine, engine_opts=engine_opts,
                         seed=seed)
+
+
+def eval_loss(server: ParrotServer) -> float:
+    """Sample-weighted mean loss of the server's params over every client's
+    data (the convergence signal the round-mode benchmark tracks)."""
+    tot, n = 0.0, 0
+    for d in server.data_by_client.values():
+        for b in d.batches:
+            loss, _ = GRAD_FN(server.params, b)
+            tot += float(loss) * len(b["y"])
+            n += len(b["y"])
+    return tot / max(n, 1)
 
 
 def mean_makespan(server: ParrotServer, rounds: int, skip: int = 2) -> float:

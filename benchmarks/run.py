@@ -19,6 +19,8 @@ Mapping to the paper:
                       vs the legacy per-leaf C=1 path
   bench_client_training — compiled client engine: eager vs jit-scan vs
                       jit-scan+vmap client-steps/sec at B in {1,4,16}
+  bench_round_modes — event-driven round engines: bsp vs semi-sync vs async
+                      makespan / wall / loss under dynamic heterogeneity
   bench_kernels     — Pallas wrapper micro-timings (plumbing check)
   roofline          — §Roofline terms from the dry-run artifacts
 """
@@ -26,12 +28,16 @@ import argparse
 import os
 import sys
 
-sys.path.insert(0, "src")
+# make both `repro` (src/) and the `benchmarks` package importable no matter
+# whether this runs as `python benchmarks/run.py` or `python -m benchmarks.run`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
         "bench_memory", "bench_comm", "bench_algorithms",
-        "bench_aggregation", "bench_client_training", "bench_kernels",
-        "roofline"]
+        "bench_aggregation", "bench_client_training", "bench_round_modes",
+        "bench_kernels", "roofline"]
 
 
 def main(argv=None) -> None:
@@ -52,6 +58,8 @@ def main(argv=None) -> None:
         only.update(x for x in grp.split(",") if x)
     if args.only and not only:
         p.error("--only given but no module names resolved")
+    # accept short names too: "round_modes" == "bench_round_modes"
+    only = {m if m in MODS else f"bench_{m}" for m in only}
     unknown = only - set(MODS)
     if unknown:
         p.error(f"unknown benchmark module(s): {sorted(unknown)}; "

@@ -2,7 +2,9 @@
 
 Simulates the Appendix-A protocol: fixed slowdown ratios (Hete. GPU) and
 cosine-drift instability (Dyn. GPU), then compares round makespans under
-  (a) no scheduling, (b) Parrot all-history, (c) Parrot Time-Window.
+  (a) no scheduling, (b) Parrot all-history, (c) Parrot Time-Window,
+and finally the round-engine modes (DESIGN.md §3): BSP scheduling can only
+work *around* stragglers; semi-sync and async hide them.
 
   PYTHONPATH=src python examples/heterogeneous_cluster.py
 """
@@ -33,7 +35,8 @@ grad_fn = jax.jit(jax.value_and_grad(loss_fn))
 ROUNDS = 10
 
 
-def run(name, policy, speed, window=0):
+def run(name, policy, speed, window=0, engine="bsp", engine_opts=None,
+        clients_per_round=40):
     params = {"w": jnp.zeros((32, 10)), "b": jnp.zeros((10,))}
     data = make_classification_clients(200, dim=32, n_classes=10,
                                        partition="quantity_skew",
@@ -43,8 +46,10 @@ def run(name, policy, speed, window=0):
     execs = [SequentialExecutor(k, algo, state_manager=sm, speed_model=speed)
              for k in range(8)]
     srv = ParrotServer(params=params, algorithm=algo, executors=execs,
-                       data_by_client=data, clients_per_round=40,
-                       scheduler_policy=policy, time_window=window, seed=0)
+                       data_by_client=data,
+                       clients_per_round=clients_per_round,
+                       scheduler_policy=policy, time_window=window,
+                       round_engine=engine, engine_opts=engine_opts, seed=0)
     ms = [srv.run_round().makespan for _ in range(ROUNDS)]
     err = [h.estimation_error for h in srv.history
            if np.isfinite(h.estimation_error)]
@@ -64,3 +69,13 @@ dyn = dynamic_env(8, ROUNDS)
 run("unscheduled", "none", dyn)
 run("parrot all-history", "parrot", dyn, window=0)
 run("parrot time-window(2)", "parrot", dyn, window=2)
+
+print("\n== Round engines under Dyn. GPU (same scheduler, 96/round) ==")
+c = run("bsp barrier", "parrot", dyn, clients_per_round=96)
+run("semi-sync (deadline 0.55)", "parrot", dyn, engine="semi-sync",
+    clients_per_round=96,
+    engine_opts={"deadline_frac": 0.55, "over_select": 1.2, "chunk_size": 4})
+d = run("async (lambda=0.5)", "parrot", dyn, engine="async",
+        clients_per_round=96,
+        engine_opts={"staleness_lambda": 0.5, "chunk_size": 8})
+print(f"async hides the straggler tail: {c / d:.2f}x shorter rounds")

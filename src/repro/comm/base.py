@@ -63,3 +63,16 @@ class Communicator(abc.ABC):
     @abc.abstractmethod
     def executor_recv(self, executor: int, tag: str) -> Any:
         """Executor <- server."""
+
+    @abc.abstractmethod
+    def poll(self, executor: int, tag: str) -> Any:
+        """Non-blocking server <- executor receive.
+
+        Returns the oldest pending ``executor_send`` payload for ``(executor,
+        tag)`` and consumes it, or ``None`` when nothing has landed yet.  The
+        ``executor_send`` / ``poll`` pair is the transport contract of the
+        event-driven round engines (DESIGN.md §3): executors push per-chunk
+        partials as they complete, the server drains them whenever the event
+        loop gives it control — no blocking rendezvous, so a straggler can
+        never stall the fold path.
+        """

@@ -134,3 +134,9 @@ class CollectiveComm(Communicator):
 
     def executor_recv(self, executor, tag):
         return self._inbox.pop((executor, tag))
+
+    def poll(self, executor, tag):
+        # the inbox holds at most one in-flight payload per (executor, tag):
+        # the engines drain each chunk partial before the executor's next
+        # chunk is dispatched, so a single slot is enough
+        return self._inbox.pop(("srv", executor, tag), None)

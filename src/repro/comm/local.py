@@ -56,3 +56,9 @@ class LocalComm(Communicator):
 
     def executor_recv(self, executor, tag):
         return self._to_exec[(executor, tag)].get()
+
+    def poll(self, executor, tag):
+        try:
+            return self._to_server[(executor, tag)].get_nowait()
+        except queue.Empty:
+            return None

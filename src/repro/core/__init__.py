@@ -7,7 +7,10 @@
   algorithms.py              — 6 FL algorithms over generic pytrees (§5.1)
   client_step.py             — compiled client-training engine (jit-scan
                                local SGD, vmapped client blocks)
-  executor.py / round.py     — sequential executors + round engine (Alg. 2)
+  executor.py / round.py     — sequential executors + Parrot server (Alg. 2)
+  engine.py / clock.py       — event-driven round engines (BSP / semi-sync /
+                               async bounded-staleness) on a shared
+                               virtual-time event queue
   compression.py             — delta compression (top-k EF / int8)
 """
 from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
@@ -16,6 +19,9 @@ from repro.core.flat import FlatLayout
 from repro.core.algorithms import (ALGORITHMS, ClientData, FLAlgorithm,
                                    make_algorithm)
 from repro.core.client_step import ClientStepEngine, engine_for
+from repro.core.clock import TickTimer, VirtualClock
+from repro.core.engine import (AsyncEngine, BSPEngine, RoundEngine,
+                               SemiSyncEngine, make_engine)
 from repro.core.executor import SequentialExecutor
 from repro.core.round import ParrotServer, RoundMetrics, run_flat_reference
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
@@ -23,11 +29,12 @@ from repro.core.state_manager import ClientStateManager, owner_host
 from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
 
 __all__ = [
-    "ALGORITHMS", "ClientData", "ClientResult", "ClientStateManager",
-    "ClientStepEngine", "ClientTask", "FLAlgorithm", "FlatLayout",
-    "LocalAggregator", "Op", "ParrotScheduler",
-    "ParrotServer", "RoundMetrics", "RunRecord", "Schedule",
-    "SequentialExecutor", "WorkloadEstimator", "WorkloadModel",
+    "ALGORITHMS", "AsyncEngine", "BSPEngine", "ClientData", "ClientResult",
+    "ClientStateManager", "ClientStepEngine", "ClientTask", "FLAlgorithm",
+    "FlatLayout", "LocalAggregator", "Op", "ParrotScheduler",
+    "ParrotServer", "RoundEngine", "RoundMetrics", "RunRecord", "Schedule",
+    "SemiSyncEngine", "SequentialExecutor", "TickTimer", "VirtualClock",
+    "WorkloadEstimator", "WorkloadModel",
     "engine_for", "flat_aggregate", "global_aggregate", "make_algorithm",
-    "owner_host", "run_flat_reference",
+    "make_engine", "owner_host", "run_flat_reference",
 ]

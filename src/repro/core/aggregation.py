@@ -220,6 +220,89 @@ class LocalAggregator:
 
 
 # ---------------------------------------------------------------------------
+# staleness weighting (async bounded-staleness engine)
+# ---------------------------------------------------------------------------
+
+def merge_partials(acc: Optional[Dict[str, Any]],
+                   partial: Dict[str, Any]) -> Dict[str, Any]:
+    """Fold one partial into a running partial-of-partials (same wire
+    format), so the async engine's server-side buffer stays O(s_a) no matter
+    how many chunk partials land between model updates.  ``acc=None`` starts
+    the accumulator (the first partial is copied shallowly so later merges
+    never mutate an executor's live buffers).  Flat partials merge
+    buffer-wise; legacy nested partials merge per-entry."""
+    if acc is None:
+        out = dict(partial)
+        out["sums"] = (flat_sums(dict(partial["sums"]["buffers"]))
+                       if is_flat_partial(partial)
+                       else dict(partial["sums"]))
+        out["weights"] = dict(partial.get("weights", {}))
+        out["counts"] = dict(partial.get("counts", {}))
+        out["collected"] = {k: list(v)
+                            for k, v in partial.get("collected", {}).items()}
+        return out
+    if is_flat_partial(acc) != is_flat_partial(partial):
+        raise ValueError("cannot merge flat and nested partials")
+    if is_flat_partial(acc):
+        la, lp = acc.get("layout"), partial.get("layout")
+        if la is not None and lp is not None \
+                and la.signature() != lp.signature():
+            raise ValueError("flat partials built under different layouts")
+        bufs = acc["sums"]["buffers"]
+        for g, b in partial["sums"]["buffers"].items():
+            bufs[g] = bufs[g] + b if g in bufs else b
+    else:
+        sums = acc["sums"]
+        for name, v in partial["sums"].items():
+            sums[name] = (jax.tree.map(lambda x, y: x + y, sums[name], v)
+                          if name in sums else v)
+    for field_ in ("weights", "counts"):
+        dst = acc[field_]
+        for k, v in partial.get(field_, {}).items():
+            dst[k] = dst.get(k, 0) + v
+    for k, v in partial.get("collected", {}).items():
+        acc["collected"].setdefault(k, []).extend(v)
+    acc["n_clients"] = acc.get("n_clients", 0) + partial.get("n_clients", 0)
+    return acc
+
+
+def staleness_weight(staleness: float, lam: float) -> float:
+    """Bounded-staleness discount γ = 1 / (1 + λ·s): a partial computed
+    against a model ``s`` server versions old contributes with weight γ — it
+    still moves the model (no work wasted), but cannot drag it back towards
+    where it was ``s`` updates ago at full strength."""
+    return 1.0 / (1.0 + lam * max(float(staleness), 0.0))
+
+
+def scale_partial(partial: Dict[str, Any], gamma: float) -> Dict[str, Any]:
+    """Scale a partial's *contribution* by ``gamma`` on the wire format.
+
+    Both the numerators (the flat group buffers, or nested sum leaves) and
+    the denominators (per-entry weights and counts) scale together, so a
+    γ-scaled partial enters WEIGHTED_AVG / AVG entries with relative weight
+    γ versus fresh partials, SUM entries are discounted to γ·Σ, and COLLECT
+    entries keep their values with γ-scaled client weights.  ``gamma == 1``
+    returns the partial unchanged (no copy)."""
+    if gamma == 1.0:
+        return partial
+    out = dict(partial)
+    sums = partial.get("sums", {})
+    if is_flat_partial(partial):
+        out["sums"] = flat_sums({g: b * gamma
+                                 for g, b in sums["buffers"].items()})
+    else:
+        out["sums"] = {name: jax.tree.map(lambda x: x * gamma, v)
+                       for name, v in sums.items()}
+    out["weights"] = {k: v * gamma
+                      for k, v in partial.get("weights", {}).items()}
+    out["counts"] = {k: v * gamma
+                     for k, v in partial.get("counts", {}).items()}
+    out["collected"] = {k: [(w * gamma, v) for w, v in lst]
+                        for k, lst in partial.get("collected", {}).items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
 # global aggregate
 # ---------------------------------------------------------------------------
 

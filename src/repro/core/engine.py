@@ -1,0 +1,672 @@
+"""Event-driven round engines: pluggable BSP / semi-sync / async synchronization.
+
+``ParrotServer.run_round`` delegates to a :class:`RoundEngine`.  All three
+engines speak the same vocabulary — executor *chunks* complete as events on
+the shared :class:`~repro.core.clock.VirtualClock`, failures are events,
+partials cross the comm layer on the flat wire format — and differ only in
+*when the server folds and updates* (DESIGN.md §3):
+
+``bsp``
+    The paper's Algorithm 2, bit-exact with the pre-engine loop: every
+    executor drains its whole queue, the round barrier collects the K
+    partials in executor order, round time is ``max_k Σ T̂``.  Failures
+    re-run the dead executor's remaining clients on the survivors and
+    shrink K (elastic membership); speculative backup tasks duplicate the
+    predicted-slowest tail.
+
+``semi-sync``
+    Over-selects clients, derives a virtual-time deadline from the fitted
+    workload model, folds whatever chunk partials have landed by the
+    deadline and carries unfinished tasks into the next round's pool —
+    stragglers lose work share instead of gating the round.
+
+``async``
+    No barrier at all: executors emit a partial per chunk as they complete;
+    the server folds each one as it lands, discounted by the bounded-
+    staleness weight γ = 1/(1+λ·s) where s is the number of server updates
+    since the chunk's payload was broadcast.  A model update fires every
+    ``goal`` folded clients; idle executors steal chunks from the
+    predicted-slowest queue.  Round time becomes the virtual span between
+    updates — the straggler's tail is hidden, not scheduled around.
+
+The semi-sync and async engines run a deterministic discrete-event
+simulation: chunks execute lazily at their virtual dispatch time (every
+earlier event has already been processed, so each chunk sees the params
+version and queue state a causally-correct parallel run would show it), and
+event order is a pure function of the per-chunk virtual durations.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.aggregation import (global_aggregate, merge_partials,
+                                    scale_partial, staleness_weight)
+from repro.core.clock import VirtualClock
+from repro.core.executor import ExecutorFailure, ExecutorReport
+from repro.core.scheduler import (ClientTask, Schedule, pick_steal_victim,
+                                  predict_remaining, predict_span)
+from repro.core.workload import RunRecord
+
+
+@dataclass
+class _ExecState:
+    """Per-executor bookkeeping inside the discrete-event simulation."""
+    queue: List[ClientTask] = field(default_factory=list)
+    t: float = 0.0            # virtual time of the last completed chunk
+    busy_until: float = 0.0   # completion time of the in-flight chunk
+    inflight: bool = False
+    offset: int = 0           # cumulative dispatched-task index (fail_at)
+    stopped: bool = False     # semi-sync: hit the deadline, queue carried
+    dead: bool = False        # failure event pushed but not yet processed
+
+
+class RoundEngine:
+    """One synchronization mode.  Engines may keep state across rounds (the
+    async engine does); a server owns exactly one engine instance."""
+
+    mode: str = "?"
+
+    def run_round(self, srv) -> "RoundMetrics":
+        raise NotImplementedError
+
+    # -- shared plumbing ---------------------------------------------------
+    def _chunk_size(self, srv, override: Optional[int]) -> int:
+        if override:
+            return max(1, int(override))
+        return max(e.client_block for e in srv.executors.values())
+
+    def _wire(self, srv, executor: int, partial: Dict) -> Dict:
+        """Ship one partial through the comm layer (compress → send → poll →
+        decompress): the copy that reaches aggregation is the one that
+        crossed the wire, keeping error-feedback residuals in sync."""
+        srv.comm.executor_send(executor, srv._maybe_compress(partial),
+                               tag="partial")
+        wire = srv.comm.poll(executor, tag="partial")
+        if wire is None:      # transport without immediate local delivery
+            wire = srv.comm.recv_from_executor(executor, tag="partial")
+        return srv._maybe_decompress(wire)
+
+    def _chunk_record(self, srv, rnd: int, rep: ExecutorReport
+                      ) -> Optional[RunRecord]:
+        """Per-chunk timing record (workload.py): one (N_total, T̂) pair per
+        chunk — what the engines' chunk-granular predictions consume."""
+        if rep.n_tasks == 0:
+            return None
+        n = sum(srv.data_by_client[c].n_samples
+                for c in rep.completed_clients)
+        return RunRecord(round=rnd, client=rep.completed_clients[0],
+                         executor=rep.executor, n_samples=n,
+                         time=rep.virtual_time, n_tasks=rep.n_tasks)
+
+    def _fail_over(self, srv, states: Dict[int, _ExecState], dead: int,
+                   remaining: List[ClientTask]) -> List[int]:
+        """Elastic failure as an engine event: drop the dead executor
+        (K shrink), append its unfinished tasks round-robin onto the
+        survivors' queues.  Tasks assigned to the dead executor *after* its
+        failure event was pushed (an async refill can land in between) are
+        still parked on its queue and re-home too.  Returns survivor ids."""
+        srv.executors.pop(dead, None)
+        dead_state = states.pop(dead, None)
+        if dead_state is not None and dead_state.queue:
+            remaining = list(remaining) + dead_state.queue
+        survivors = sorted(states)
+        if not survivors:
+            raise RuntimeError("all executors failed")
+        for i, t in enumerate(remaining):
+            states[survivors[i % len(survivors)]].queue.append(t)
+        return survivors
+
+
+def make_engine(mode: str, **opts) -> RoundEngine:
+    modes = {"bsp": BSPEngine, "semi-sync": SemiSyncEngine,
+             "semi_sync": SemiSyncEngine, "async": AsyncEngine}
+    if mode not in modes:
+        raise ValueError(f"unknown round engine {mode!r}; "
+                         f"choose from {sorted(set(modes))}")
+    return modes[mode](**opts)
+
+
+# ---------------------------------------------------------------------------
+# BSP
+# ---------------------------------------------------------------------------
+
+class BSPEngine(RoundEngine):
+    """Algorithm 2 as an event flow, bit-exact with the pre-engine loop.
+
+    BSP is a barrier: every queue completion lands *at* the barrier, so all
+    events carry virtual time 0 and pop in push order — executor-dict order
+    for the serial path, completion order for ``parallel_dispatch`` — which
+    reproduces the legacy partial/fold order exactly (float summation is not
+    associative; order is part of bit-exactness).
+    """
+
+    mode = "bsp"
+
+    def run_round(self, srv):
+        from repro.core.round import RoundMetrics
+        rnd = srv.round
+        t_wall = time.perf_counter()
+        if srv._next_tasks is not None:
+            tasks, srv._next_tasks = srv._next_tasks, None
+        else:
+            tasks = srv.select_clients()
+
+        # compute-comm overlap: the schedule for this round may have been
+        # prepared while the previous round's global reduce was in flight.
+        # An executor lost since then would still own a queue here — re-map
+        # orphaned queues onto the live set (the dropped-clients fix).
+        remapped = 0
+        if srv._pending_schedule is not None:
+            schedule, overlapped = srv._pending_schedule, True
+            srv._pending_schedule = None
+            remapped = schedule.remap(list(srv.executors))
+        else:
+            schedule, overlapped = srv.scheduler.schedule(
+                rnd, tasks, list(srv.executors)), False
+
+        payload = srv.algorithm.broadcast_payload(srv.params,
+                                                  srv.server_state)
+        skip_map, n_backups = srv._plan_backups(schedule)
+        reports, n_failed = self._dispatch(srv, rnd, schedule, payload,
+                                           skip_map)
+
+        # overlap: prepare round r+1's schedule "while the reduce is in
+        # flight" (before the global_aggregate below consumes the partials)
+        if srv.overlap_scheduling:
+            srv.estimator.record_many(
+                [rec for r in reports for rec in r.records])
+            srv._next_tasks = srv.select_clients()
+            srv._pending_schedule = srv.scheduler.schedule(
+                rnd + 1, srv._next_tasks, list(srv.executors))
+
+        partials = [r.partial for r in reports]   # already the wire copies
+        ops = srv.algorithm.ops()
+        agg = global_aggregate(partials, ops)
+        agg["_n_selected"] = sum(r.n_tasks for r in reports)
+        srv.params, srv.server_state = srv.algorithm.server_update(
+            srv.params, agg, srv.server_state, len(srv.data_by_client))
+
+        records = [rec for r in reports for rec in r.records]
+        err = float("nan")
+        if srv.estimator.last_fit:
+            err = srv.estimator.estimation_error(srv.estimator.last_fit,
+                                                 records)
+        if not srv.overlap_scheduling:  # overlap path already recorded them
+            srv.estimator.record_many(records)
+        makespan = max((r.virtual_time for r in reports), default=0.0)
+        stats = srv.comm.stats.reset()
+        extra = {"backup_tasks": float(n_backups)}
+        if remapped:
+            extra["remapped_tasks"] = float(remapped)
+        metrics = RoundMetrics(
+            round=rnd, makespan=makespan,
+            wall_time=time.perf_counter() - t_wall,
+            schedule_time=0.0 if overlapped else schedule.schedule_time_s,
+            estimate_time=0.0 if overlapped else schedule.estimate_time_s,
+            predicted_makespan=schedule.predicted_makespan,
+            comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
+            n_clients=len(tasks), n_executors=len(srv.executors),
+            estimation_error=err, failures=n_failed, extra=extra)
+        srv.history.append(metrics)
+        srv.round += 1
+        if srv.checkpoint_manager is not None:
+            srv.checkpoint_manager.maybe_save(srv)
+        return metrics
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, srv, rnd: int, schedule: Schedule, payload: Dict,
+                  skip_map: Optional[Dict[int, Set[int]]] = None
+                  ) -> Tuple[List[ExecutorReport], int]:
+        live = list(srv.executors)
+        srv.comm.broadcast(payload, live, tag="broadcast")
+        clock = VirtualClock()
+        reports: List[ExecutorReport] = []
+        failed: List[int] = []
+        done_clients: set = set()
+
+        def run(k: int) -> ExecutorReport:
+            return srv.executors[k].run_queue(
+                rnd, schedule.queue(k), payload, srv.data_by_client,
+                skip_clients=(skip_map or {}).get(k))
+
+        # barrier semantics: every outcome lands at t=0; seq order preserves
+        # the legacy collection order
+        if srv.parallel_dispatch:
+            with cf.ThreadPoolExecutor(max_workers=len(live)) as pool:
+                futs = {pool.submit(run, k): k for k in live}
+                for fut in cf.as_completed(futs):
+                    k = futs[fut]
+                    try:
+                        clock.push(0.0, "queue_done", fut.result())
+                    except ExecutorFailure:
+                        clock.push(0.0, "executor_failed", k)
+        else:
+            for k in live:
+                try:
+                    clock.push(0.0, "queue_done", run(k))
+                except ExecutorFailure:
+                    clock.push(0.0, "executor_failed", k)
+
+        for ev in clock.drain():
+            if ev.kind == "queue_done":
+                reports.append(ev.data)
+            else:
+                failed.append(ev.data)
+
+        # ---- fault handling: re-run failed queues on the survivors -------
+        if failed:
+            for rep in reports:
+                done_clients.update(rep.completed_clients)
+            survivors = [k for k in live if k not in failed]
+            if not survivors:
+                raise RuntimeError("all executors failed")
+            # dedup by client: with backup duplicates a task can sit in two
+            # failed queues at once and must still re-run (and fold) once
+            leftovers: List[ClientTask] = []
+            for k in failed:
+                for t in schedule.queue(k):
+                    if t.client not in done_clients:
+                        done_clients.add(t.client)
+                        leftovers.append(t)
+                del srv.executors[k]           # elastic K shrink
+            for i, t in enumerate(leftovers):  # round-robin retry placement
+                k = survivors[i % len(survivors)]
+                rep = srv.executors[k].run_queue(
+                    rnd, [t], payload, srv.data_by_client)
+                reports.append(rep)
+
+        # the partial that reaches aggregation is the one that crossed the
+        # wire: compress once, ship, and aggregate the decompressed copy
+        # (error-feedback residuals and the aggregated values stay in sync)
+        for rep in reports:
+            srv.comm.executor_send(rep.executor,
+                                   srv._maybe_compress(rep.partial),
+                                   tag="partial")
+            rep.partial = srv._maybe_decompress(
+                srv.comm.recv_from_executor(rep.executor, tag="partial"))
+        return reports, len(failed)
+
+
+# ---------------------------------------------------------------------------
+# semi-sync
+# ---------------------------------------------------------------------------
+
+class SemiSyncEngine(RoundEngine):
+    """Deadline-bounded rounds with over-selection and task carry-over.
+
+    ``over_select`` inflates the per-round selection (so the deadline cut
+    still folds ~``clients_per_round`` results); the deadline is
+    ``deadline_frac ×`` the schedule's predicted makespan (∞ during warmup,
+    when no workload model exists — the round then degenerates to BSP).
+    An executor dispatches its next chunk only if the fitted model predicts
+    it lands before the deadline; everything it does not dispatch — plus a
+    dead executor's re-homed tasks that miss the deadline on the survivors —
+    carries into the next round's selection pool.  Every executor gets its
+    first chunk unconditionally, so a round always makes progress.
+    """
+
+    mode = "semi-sync"
+
+    def __init__(self, over_select: float = 1.5, deadline_frac: float = 0.75,
+                 chunk_size: Optional[int] = None):
+        self.over_select = float(over_select)
+        self.deadline_frac = float(deadline_frac)
+        self.chunk_size = chunk_size
+        self._carry: List[ClientTask] = []
+
+    def run_round(self, srv):
+        from repro.core.round import RoundMetrics
+        rnd = srv.round
+        t_wall = time.perf_counter()
+
+        target = max(1, math.ceil(self.over_select * srv.clients_per_round))
+        carried, self._carry = self._carry, []
+        n_fresh = max(0, target - len(carried))
+        fresh = srv.select_clients(
+            n=n_fresh, exclude=[t.client for t in carried])
+        tasks = carried + fresh
+        schedule = srv.scheduler.schedule(rnd, tasks, list(srv.executors))
+        payload = srv.algorithm.broadcast_payload(srv.params,
+                                                  srv.server_state)
+        live = list(srv.executors)
+        srv.comm.broadcast(payload, live, tag="broadcast")
+
+        models = dict(srv.estimator.last_fit)
+        chunk = self._chunk_size(srv, self.chunk_size)
+        # the deadline lives in the same units the executors accrue: the
+        # chunk-granular predicted makespan of this schedule (the per-task
+        # Eq.-4 prediction pays one offset b per *task* and would overshoot
+        # a chunked round by ~(chunk-1)·b per chunk, leaving the deadline
+        # unreachable).  No models yet (warmup) -> ∞ -> a full BSP round.
+        pm = max((predict_remaining(models.get(k), schedule.queue(k), chunk)
+                  for k in live), default=0.0)
+        deadline = self.deadline_frac * pm if pm > 0.0 else float("inf")
+
+        clock = VirtualClock()
+        states = {k: _ExecState(queue=list(schedule.queue(k))) for k in live}
+        partials: List[Dict] = []
+        records: List[RunRecord] = []
+        n_landed = 0
+        n_failed = 0
+        for k in live:
+            self._dispatch_next(srv, rnd, k, states, clock, payload, models,
+                                deadline, chunk)
+        while clock:
+            ev = clock.pop()
+            if ev.kind == "chunk_done":
+                k, rep = ev.data
+                es = states[k]
+                es.t, es.inflight = ev.time, False
+                if rep.n_tasks:
+                    partials.append(self._wire(srv, k, rep.partial))
+                    rec = self._chunk_record(srv, rnd, rep)
+                    if rec is not None:
+                        records.append(rec)
+                    n_landed += rep.n_tasks
+                self._dispatch_next(srv, rnd, k, states, clock, payload,
+                                    models, deadline, chunk)
+            else:  # executor_failed
+                dead, remaining = ev.data
+                n_failed += 1
+                survivors = self._fail_over(srv, states, dead, remaining)
+                for j in survivors:
+                    if states[j].stopped:
+                        # already past the deadline: re-homed tasks carry
+                        # over instead of silently parking on a stopped queue
+                        self._carry.extend(states[j].queue)
+                        states[j].queue = []
+                    elif not states[j].inflight:  # wake finished survivors
+                        self._dispatch_next(srv, rnd, j, states, clock,
+                                            payload, models, deadline, chunk)
+
+        ops = srv.algorithm.ops()
+        if partials:
+            agg = global_aggregate(partials, ops)
+            agg["_n_selected"] = n_landed
+            srv.params, srv.server_state = srv.algorithm.server_update(
+                srv.params, agg, srv.server_state, len(srv.data_by_client))
+
+        err = float("nan")
+        if srv.estimator.last_fit:
+            err = srv.estimator.estimation_error(srv.estimator.last_fit,
+                                                 records)
+        srv.estimator.record_many(records)
+        makespan = max((es.t for es in states.values()), default=0.0)
+        stats = srv.comm.stats.reset()
+        metrics = RoundMetrics(
+            round=rnd, makespan=makespan,
+            wall_time=time.perf_counter() - t_wall,
+            schedule_time=schedule.schedule_time_s,
+            estimate_time=schedule.estimate_time_s,
+            predicted_makespan=schedule.predicted_makespan,
+            comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
+            n_clients=len(tasks), n_executors=len(srv.executors),
+            estimation_error=err, failures=n_failed,
+            extra={"landed_clients": float(n_landed),
+                   "carried_tasks": float(len(self._carry)),
+                   "deadline": deadline})
+        srv.history.append(metrics)
+        srv.round += 1
+        if srv.checkpoint_manager is not None:
+            srv.checkpoint_manager.maybe_save(srv)
+        return metrics
+
+    # ------------------------------------------------------------------
+    def _dispatch_next(self, srv, rnd, k, states, clock, payload, models,
+                       deadline, chunk) -> None:
+        es = states[k]
+        if not es.queue or es.stopped or es.dead:
+            return
+        next_chunk = es.queue[:chunk]
+        pred = predict_span(models.get(k), next_chunk)
+        start = max(es.t, clock.now)
+        if es.t > 0.0 and start + pred > deadline:
+            # predicted to miss the deadline: stop here, carry the rest
+            # (first chunk is exempt — a round always makes progress)
+            es.stopped = True
+            self._carry.extend(es.queue)
+            es.queue = []
+            return
+        es.queue = es.queue[chunk:]
+        try:
+            rep = srv.executors[k].run_queue(
+                rnd, next_chunk, payload, srv.data_by_client,
+                task_offset=es.offset)
+        except ExecutorFailure:
+            # the failing chunk never folded: every one of its clients must
+            # re-home along with the rest of the queue.  The executor is
+            # dead the moment the event is pushed — nothing may dispatch on
+            # it while the event waits in the queue.
+            clock.push(start, "executor_failed", (k, next_chunk + es.queue))
+            es.queue = []
+            es.dead = True
+            return
+        es.offset += len(next_chunk)
+        es.inflight = True
+        es.busy_until = start + rep.virtual_time
+        clock.push(es.busy_until, "chunk_done", (k, rep))
+
+
+# ---------------------------------------------------------------------------
+# async (bounded staleness)
+# ---------------------------------------------------------------------------
+
+class AsyncEngine(RoundEngine):
+    """Continuous bounded-staleness federation.
+
+    The engine persists across ``run_round`` calls: executor virtual clocks,
+    queues and in-flight chunks carry over, so "round r" is just the span
+    between server updates r and r+1 on the shared virtual axis.  Each
+    folded chunk is discounted by γ = 1/(1+λ·s) where s counts the server
+    updates since the chunk's dispatch; the server updates after ``goal``
+    (default ``clients_per_round``) clients have folded, then broadcasts the
+    new payload, re-schedules a fresh selection on the live executors with
+    the current workload models, and wakes any idle executor.  An executor
+    with an empty queue steals the tail chunk of the predicted-slowest
+    queue before going idle.
+    """
+
+    mode = "async"
+
+    def __init__(self, staleness_lambda: float = 0.5,
+                 chunk_size: Optional[int] = None,
+                 pipeline_depth: float = 2.0,
+                 goal: Optional[int] = None):
+        self.staleness_lambda = float(staleness_lambda)
+        self.chunk_size = chunk_size
+        self.pipeline_depth = float(pipeline_depth)
+        self.goal = goal
+        self._states: Optional[Dict[int, _ExecState]] = None
+        self._clock = VirtualClock()
+        self._in_system: Set[int] = set()
+        self._last_update_t = 0.0
+        self._last_sched: Optional[Schedule] = None
+        self._reset_window()
+
+    def _reset_window(self) -> None:
+        """Clear the per-update accumulators (one 'round' = one window)."""
+        self._buffer: Optional[Dict] = None
+        self._n_folded = 0
+        self._records: List[RunRecord] = []
+        self._n_failed = 0
+        self._steals = 0
+        self._stale_folds = 0
+        self._stale_sum = 0.0
+
+    # ------------------------------------------------------------------
+    def _ensure_init(self, srv) -> None:
+        if self._states is not None:
+            return
+        self._payload = srv.algorithm.broadcast_payload(srv.params,
+                                                        srv.server_state)
+        live = list(srv.executors)
+        srv.comm.broadcast(self._payload, live, tag="broadcast")
+        n0 = max(1, math.ceil(self.pipeline_depth * srv.clients_per_round))
+        tasks = srv.select_clients(n=n0)
+        schedule = srv.scheduler.schedule(srv.round, tasks, live)
+        self._last_sched = schedule
+        self._states = {k: _ExecState(queue=list(schedule.queue(k)))
+                        for k in live}
+        self._in_system = {t.client for t in tasks}
+        for k in live:
+            self._dispatch_next(srv, k)
+
+    def _refill(self, srv) -> None:
+        """Top the pool back up with a fresh selection, re-scheduled onto
+        the live executors under the *current* workload models (clients
+        already in the system are excluded — a client must fold before it
+        can be picked again, which keeps stateful algorithms race-free)."""
+        # an executor whose failure event is still in flight gets no new
+        # work (it would only need re-homing when the event pops)
+        live = [k for k in srv.executors if not self._states[k].dead]
+        fresh = srv.select_clients(n=srv.clients_per_round,
+                                   exclude=self._in_system)
+        if not fresh or not live:
+            return
+        schedule = srv.scheduler.schedule(srv.round, fresh, live)
+        self._last_sched = schedule
+        for k in live:
+            # offset is NOT reset: fail_at's task index counts tasks
+            # dispatched by this executor cumulatively, so every index is
+            # reachable and no (round, index) coordinate repeats
+            self._states[k].queue.extend(schedule.queue(k))
+        self._in_system.update(t.client for t in fresh)
+
+    # ------------------------------------------------------------------
+    def _dispatch_next(self, srv, k: int) -> None:
+        es = self._states[k]
+        if es.dead:
+            return
+        chunk = self._chunk_size(srv, self.chunk_size)
+        if not es.queue:
+            # work stealing: grab the tail chunk of the predicted-slowest
+            # queue (its owner was never going to reach it soon anyway)
+            victim = pick_steal_victim(
+                {j: s.queue for j, s in self._states.items()},
+                {j: (s.busy_until if s.inflight else s.t)
+                 for j, s in self._states.items()},
+                srv.estimator.last_fit, k, chunk)
+            if victim is None:
+                return            # nothing anywhere: idle until refill
+            vq = self._states[victim].queue
+            es.queue, self._states[victim].queue = vq[-chunk:], vq[:-chunk]
+            self._steals += 1
+        tasks, es.queue = es.queue[:chunk], es.queue[chunk:]
+        start = max(es.t, self._clock.now)
+        rnd = srv.round
+        try:
+            rep = srv.executors[k].run_queue(
+                rnd, tasks, self._payload, srv.data_by_client,
+                task_offset=es.offset)
+        except ExecutorFailure:
+            self._clock.push(start, "executor_failed", (k, tasks + es.queue))
+            es.queue = []
+            es.dead = True   # no re-dispatch while the event is in flight
+            return
+        es.offset += len(tasks)
+        es.inflight = True
+        es.busy_until = start + rep.virtual_time
+        self._clock.push(es.busy_until, "chunk_done", (k, rep, rnd))
+
+    # ------------------------------------------------------------------
+    def run_round(self, srv):
+        from repro.core.round import RoundMetrics
+        t_wall = time.perf_counter()
+        self._ensure_init(srv)
+        rnd = srv.round
+        goal = self.goal or srv.clients_per_round
+
+        while self._n_folded < goal:
+            if not self._clock:
+                if self._n_folded > 0:
+                    break          # drained: update with what we have
+                self._refill(srv)
+                for k in list(self._states):
+                    if not self._states[k].inflight:
+                        self._dispatch_next(srv, k)
+                if not self._clock:
+                    raise RuntimeError("async engine starved: no runnable "
+                                       "clients on any executor")
+                continue
+            ev = self._clock.pop()
+            if ev.kind == "chunk_done":
+                k, rep, version = ev.data
+                es = self._states[k]
+                es.t, es.inflight = ev.time, False
+                if rep.n_tasks:
+                    wire = self._wire(srv, k, rep.partial)
+                    s = srv.round - version
+                    gamma = staleness_weight(s, self.staleness_lambda)
+                    self._buffer = merge_partials(self._buffer,
+                                                  scale_partial(wire, gamma))
+                    self._n_folded += rep.n_tasks
+                    if s > 0:
+                        self._stale_folds += 1
+                    self._stale_sum += s
+                    rec = self._chunk_record(srv, version, rep)
+                    if rec is not None:
+                        self._records.append(rec)
+                    self._in_system.difference_update(rep.completed_clients)
+                self._dispatch_next(srv, k)
+            else:  # executor_failed
+                dead, remaining = ev.data
+                self._n_failed += 1
+                survivors = self._fail_over(srv, self._states, dead,
+                                            remaining)
+                for j in survivors:
+                    if not self._states[j].inflight:
+                        self._dispatch_next(srv, j)
+
+        # ---- server update (one bounded-staleness window == one round) ---
+        ops = srv.algorithm.ops()
+        agg = global_aggregate([self._buffer], ops)
+        agg["_n_selected"] = self._n_folded
+        srv.params, srv.server_state = srv.algorithm.server_update(
+            srv.params, agg, srv.server_state, len(srv.data_by_client))
+
+        err = float("nan")
+        if srv.estimator.last_fit:
+            err = srv.estimator.estimation_error(srv.estimator.last_fit,
+                                                 self._records)
+        srv.estimator.record_many(self._records)
+        makespan = self._clock.now - self._last_update_t
+        self._last_update_t = self._clock.now
+        stats = srv.comm.stats.reset()
+        sched = self._last_sched
+        n_folds = max(len(self._records), 1)
+        metrics = RoundMetrics(
+            round=rnd, makespan=makespan,
+            wall_time=time.perf_counter() - t_wall,
+            schedule_time=sched.schedule_time_s if sched else 0.0,
+            estimate_time=sched.estimate_time_s if sched else 0.0,
+            predicted_makespan=(sched.predicted_makespan if sched
+                                else float("nan")),
+            comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
+            n_clients=self._n_folded, n_executors=len(srv.executors),
+            estimation_error=err, failures=self._n_failed,
+            extra={"steals": float(self._steals),
+                   "stale_folds": float(self._stale_folds),
+                   "mean_staleness": self._stale_sum / n_folds,
+                   "in_system": float(len(self._in_system))})
+        srv.history.append(metrics)
+        srv.round += 1
+        self._reset_window()
+
+        # new version: broadcast Θ^{r+1} (counted in the next window's comm
+        # stats), top the pool up, wake idle executors
+        self._payload = srv.algorithm.broadcast_payload(srv.params,
+                                                        srv.server_state)
+        srv.comm.broadcast(self._payload, list(srv.executors),
+                           tag="broadcast")
+        self._refill(srv)
+        for k in list(self._states):
+            if not self._states[k].inflight:
+                self._dispatch_next(srv, k)
+
+        if srv.checkpoint_manager is not None:
+            srv.checkpoint_manager.maybe_save(srv)
+        return metrics

@@ -26,6 +26,18 @@ is cached here and reused for every subsequent round (flatten-once), and
 client deltas fold in micro-batches of ``agg_micro_batch`` — one kernel
 dispatch per B clients instead of one per pytree leaf per client.
 
+Chunked execution (DESIGN.md §3): a *chunk* — a slice of the queue run as
+its own span via ``run_queue(<slice>, task_offset=)``, yielding its own
+shippable flat partial — is the executor-side unit the event-driven engines
+dispatch.  The engines drive chunks one at a time through the shared
+virtual clock (lazy dispatch is what makes the DES causally correct), so
+they call ``run_queue`` per chunk themselves; ``run_queue(chunk_size=,
+on_partial=)`` is the self-contained streaming form of the same contract
+for callers without an event loop, and delegates to the identical per-chunk
+path.  The wall-clock source is injectable (``timer``; see
+``core/clock.py``) so engine-equivalence tests can pin down measured
+durations deterministically.
+
 Client training itself runs through the compiled engine
 (``core.client_step``): ``run_queue`` groups same-signature clients into
 blocks of ``client_block`` and runs one vmapped jit-scan per block, folding
@@ -97,7 +109,8 @@ class SequentialExecutor:
                  agg_micro_batch: int = 16,
                  use_compiled_steps: bool = True,
                  client_block: int = 8,
-                 fail_at: Optional[Tuple[int, int]] = None):
+                 fail_at: Optional[Tuple[int, int]] = None,
+                 timer: Optional[Callable[[], float]] = None):
         self.id = executor_id
         self.algorithm = algorithm
         self.state_manager = state_manager
@@ -106,6 +119,10 @@ class SequentialExecutor:
         self.agg_micro_batch = agg_micro_batch
         self.use_compiled_steps = use_compiled_steps
         self.client_block = max(1, int(client_block))
+        # injectable wall-clock source (core/clock.py): the engine
+        # equivalence tests swap in a deterministic TickTimer so measured
+        # durations become a pure function of the code path taken
+        self.timer = timer or time.perf_counter
         self._layout_cache = None   # FlatLayout, computed once, reused per round
         # steady-state block cost per (signature, B): running minimum of
         # clean measurements — virtual time stays deterministic-ish on a
@@ -122,44 +139,96 @@ class SequentialExecutor:
 
     def run_queue(self, rnd: int, tasks: List[ClientTask], payload: Dict,
                   data_by_client: Dict[int, ClientData],
-                  skip_clients: Optional[set] = None) -> ExecutorReport:
+                  skip_clients: Optional[set] = None,
+                  chunk_size: Optional[int] = None,
+                  on_partial: Optional[Callable[["ExecutorReport"], None]]
+                  = None,
+                  task_offset: int = 0) -> ExecutorReport:
+        """Run a task queue (``Device_Executes``).
+
+        ``chunk_size`` switches to chunked *streaming* execution: the queue
+        is cut into chunks of at most that many tasks, each chunk runs as
+        its own span (own LocalAggregator, so its partial is shippable on
+        its own) and is emitted through ``on_partial`` the moment it
+        completes.  The returned report merges the chunk reports; its
+        ``partial`` is the merge of the chunk partials (identical aggregate
+        to one unchunked run).  The engines themselves call this method once
+        per chunk with ``task_offset`` instead (their event loop owns the
+        interleaving) — both routes run the same per-chunk code.
+
+        ``task_offset`` keeps ``fail_at``'s task index global to the
+        executor's dispatch stream when the caller passes slices of it.
+        """
+        if chunk_size is not None:
+            return self._run_chunked(rnd, tasks, payload, data_by_client,
+                                     skip_clients, chunk_size, on_partial,
+                                     task_offset)
         agg = LocalAggregator(self.algorithm.ops(),
                               use_kernel=self.use_agg_kernel,
                               micro_batch=self.agg_micro_batch,
                               layout=self._layout_cache)
         records: List[RunRecord] = []
         completed: List[int] = []
-        t_start = time.perf_counter()
+        t_start = self.timer()
         eta = self.speed_model(self.id, rnd)
         # fail_at is task-index-granular: a round with a pending injection
         # runs the eager per-task loop so the index semantics stay exact
+        # (round -1 is a wildcard: fire at that dispatch index in any round
+        # — the async engine's dispatch stream spans update boundaries)
         if self.use_compiled_steps and not (
-                self.fail_at is not None and self.fail_at[0] == rnd):
+                self.fail_at is not None and self.fail_at[0] in (rnd, -1)):
             vtime = self._run_blocked(rnd, tasks, payload, data_by_client,
                                       skip_clients, agg, records, completed,
                                       eta)
         else:
             vtime = self._run_eager(rnd, tasks, payload, data_by_client,
                                     skip_clients, agg, records, completed,
-                                    eta)
+                                    eta, task_offset)
         self._layout_cache = agg.layout     # flatten-once across rounds
         return ExecutorReport(
             executor=self.id, partial=agg.partial(), records=records,
-            virtual_time=vtime, wall_time=time.perf_counter() - t_start,
+            virtual_time=vtime, wall_time=self.timer() - t_start,
+            n_tasks=len(completed), completed_clients=completed)
+
+    def _run_chunked(self, rnd, tasks, payload, data_by_client, skip_clients,
+                     chunk_size, on_partial, task_offset) -> ExecutorReport:
+        from repro.core.aggregation import merge_partials
+        from repro.core.scheduler import split_chunks
+        merged: Optional[Dict] = None
+        records: List[RunRecord] = []
+        completed: List[int] = []
+        vtime = wall = 0.0
+        offset = task_offset
+        for chunk in split_chunks(tasks, chunk_size):
+            rep = self.run_queue(rnd, chunk, payload, data_by_client,
+                                 skip_clients, task_offset=offset)
+            offset += len(chunk)
+            if on_partial is not None:
+                on_partial(rep)
+            merged = merge_partials(merged, rep.partial)
+            records.extend(rep.records)
+            completed.extend(rep.completed_clients)
+            vtime += rep.virtual_time
+            wall += rep.wall_time
+        return ExecutorReport(
+            executor=self.id, partial=merged if merged is not None else
+            LocalAggregator(self.algorithm.ops()).partial(),
+            records=records, virtual_time=vtime, wall_time=wall,
             n_tasks=len(completed), completed_clients=completed)
 
     # ------------------------------------------------------------------
     def _run_eager(self, rnd, tasks, payload, data_by_client, skip_clients,
-                   agg, records, completed, eta) -> float:
+                   agg, records, completed, eta, task_offset=0) -> float:
         """Legacy per-task reference path (one eager client_update per
         task; also the fault-injection path)."""
         vtime = 0.0
-        for i, task in enumerate(tasks):
-            if self.fail_at is not None and self.fail_at == (rnd, i):
+        for i, task in enumerate(tasks, start=task_offset):
+            if self.fail_at is not None and self.fail_at[1] == i \
+                    and self.fail_at[0] in (rnd, -1):
                 raise ExecutorFailure(self.id, rnd, i)
             if skip_clients and task.client in skip_clients:
                 continue  # result already produced by a backup replica
-            t0 = time.perf_counter()
+            t0 = self.timer()
             state = None
             if self.algorithm.stateful:
                 state = self.state_manager.load(task.client)
@@ -171,7 +240,7 @@ class SequentialExecutor:
                 self.state_manager.save(task.client, new_state)
             agg.fold(result)
             completed.append(task.client)
-            measured = time.perf_counter() - t0
+            measured = self.timer() - t0
             simulated = measured * (1.0 + eta)
             vtime += simulated
             records.append(RunRecord(round=rnd, client=task.client,
@@ -249,7 +318,7 @@ class SequentialExecutor:
                 jax.block_until_ready(out)
                 return out
 
-            t0 = time.perf_counter()
+            t0 = self.timer()
             if kind == "eager":           # ragged batches: reference path
                 assert len(block) == 1
                 result, new_state = self.algorithm.client_update(
@@ -258,15 +327,15 @@ class SequentialExecutor:
             else:
                 out = run_engine()
                 new_states = None
-            measured = time.perf_counter() - t0
+            measured = self.timer() - t0
             # a first-seen shape just paid its one-off compile inside the
             # timed span; re-run the (pure) computation once, result
             # discarded, so virtual time and the workload estimator see
             # steady-state throughput, not compile spikes
             if kind != "eager" and client_step.compile_events() > compiles0:
-                t0 = time.perf_counter()
+                t0 = self.timer()
                 run_engine()
-                measured = time.perf_counter() - t0
+                measured = self.timer() - t0
 
             if kind == "eager":
                 agg.fold(result)

@@ -1,19 +1,29 @@
-"""Parrot round engine — Algorithm 2 (``Server_Executes``).
+"""Parrot server — Algorithm 2 (``Server_Executes``) over a pluggable
+round engine.
 
 One ``ParrotServer`` owns: the FL algorithm, the heterogeneity-aware
 scheduler + workload estimator, K sequential executors, the client state
 managers, a Communicator, and (optionally) a checkpoint manager and a delta
-compressor.  ``run_round`` is the paper's loop:
+compressor.  ``run_round`` delegates to a :class:`~repro.core.engine.
+RoundEngine` — the synchronization policy is a constructor knob
+(``round_engine=``, DESIGN.md §3):
 
-  select clients → Task_Schedule (Alg. 3) → broadcast Θ^r + queues →
-  Device_Executes on each executor → collect K partials (one trip each) →
-  GlobalAggregate → server update.
+  bsp        — the paper's loop, strict barrier:
+               select clients → Task_Schedule (Alg. 3) → broadcast Θ^r +
+               queues → Device_Executes on each executor → collect K
+               partials (one trip each) → GlobalAggregate → server update.
+               Round time is ``max_k Σ_{m∈M_k} T̂_{m,k}`` — the makespan the
+               scheduler minimises.
+  semi-sync  — over-select, fold whatever landed by a model-derived
+               virtual-time deadline, carry the rest to the next round.
+  async      — fold chunk partials as they land with a bounded-staleness
+               weight; update every ``clients_per_round`` folds; idle
+               executors steal from the predicted-slowest queue.
 
-Round time under the BSP/SPMD model is ``max_k Σ_{m∈M_k} T̂_{m,k}`` — the
-makespan the scheduler minimises.  Executor failures mid-round are handled by
-re-running the dead executor's *remaining* queue on the surviving executors
-(clients are idempotent within a round: state saves are keyed per round) and
-shrinking K for subsequent rounds (elastic membership).
+Executor failures mid-round are engine events: the dead executor's
+*remaining* work re-runs on the survivors (clients are idempotent within a
+round: state saves are keyed per round) and K shrinks for subsequent rounds
+(elastic membership).
 
 ``mode="parrot"`` uses hierarchical aggregation; ``mode="flat"`` emulates
 SD-Dist/FA-Dist accounting (every client result shipped to the server
@@ -21,7 +31,6 @@ individually) for the Table-1 comparison benchmarks.
 """
 from __future__ import annotations
 
-import concurrent.futures as cf
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
@@ -30,12 +39,9 @@ import numpy as np
 
 from repro.comm.base import Communicator
 from repro.comm.local import LocalComm
-from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
-                                    flat_aggregate, global_aggregate,
-                                    payload_bytes)
+from repro.core.aggregation import flat_aggregate
 from repro.core.algorithms import ClientData, FLAlgorithm
-from repro.core.executor import (ExecutorFailure, ExecutorReport,
-                                 SequentialExecutor)
+from repro.core.executor import SequentialExecutor
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
 from repro.core.workload import WorkloadEstimator
 
@@ -72,7 +78,10 @@ class ParrotServer:
                  parallel_dispatch: bool = False,
                  overlap_scheduling: bool = False,
                  backup_fraction: float = 0.0,
+                 round_engine: str = "bsp",
+                 engine_opts: Optional[Dict[str, Any]] = None,
                  seed: int = 0):
+        from repro.core.engine import make_engine
         self.params = params
         self.algorithm = algorithm
         self.executors: Dict[int, SequentialExecutor] = {e.id: e for e in executors}
@@ -95,13 +104,34 @@ class ParrotServer:
         self.round = 0
         self.history: List[RoundMetrics] = []
         self._pending_schedule: Optional[Schedule] = None
+        self.engine = make_engine(round_engine, **(engine_opts or {}))
+        if self.engine.mode != "bsp":
+            # BSP-specific knobs would silently no-op under the DES engines
+            # (which serialize execution and mitigate tails via deadline
+            # carry-over / work stealing instead of backups) — fail loudly
+            for knob, val in (("backup_fraction", backup_fraction),
+                              ("parallel_dispatch", parallel_dispatch),
+                              ("overlap_scheduling", overlap_scheduling)):
+                if val:
+                    raise ValueError(
+                        f"{knob} only applies to round_engine='bsp' "
+                        f"(got {self.engine.mode!r})")
 
     # ------------------------------------------------------------------
-    def select_clients(self) -> List[ClientTask]:
-        ids = self.rng.choice(sorted(self.data_by_client),
-                              size=min(self.clients_per_round,
-                                       len(self.data_by_client)),
-                              replace=False)
+    def select_clients(self, n: Optional[int] = None,
+                       exclude: Optional[Any] = None) -> List[ClientTask]:
+        """Sample the round's cohort without replacement.  ``n`` overrides
+        ``clients_per_round`` (semi-sync over-selection, async refills);
+        ``exclude`` removes clients already in flight.  The default call is
+        rng-identical to the original BSP selection."""
+        if exclude:
+            pool = sorted(set(self.data_by_client) - set(exclude))
+        else:
+            pool = sorted(self.data_by_client)
+        size = min(self.clients_per_round if n is None else n, len(pool))
+        if size <= 0:
+            return []
+        ids = self.rng.choice(pool, size=size, replace=False)
         return [ClientTask(int(c), self.data_by_client[int(c)].n_samples)
                 for c in ids]
 
@@ -137,70 +167,6 @@ class ParrotServer:
         schedule.assignment.setdefault(fast, []).extend(tail)
         return {slow: {t.client for t in tail}}, len(tail)
 
-    # ------------------------------------------------------------------
-    def _dispatch(self, rnd: int, schedule: Schedule, payload: Dict,
-                  skip_map: Optional[Dict[int, Set[int]]] = None
-                  ) -> Tuple[List[ExecutorReport], int]:
-        live = list(self.executors)
-        self.comm.broadcast(payload, live, tag="broadcast")
-        reports: List[ExecutorReport] = []
-        failed: List[int] = []
-        done_clients: set = set()
-
-        def run(k: int) -> ExecutorReport:
-            return self.executors[k].run_queue(
-                rnd, schedule.queue(k), payload, self.data_by_client,
-                skip_clients=(skip_map or {}).get(k))
-
-        if self.parallel_dispatch:
-            with cf.ThreadPoolExecutor(max_workers=len(live)) as pool:
-                futs = {pool.submit(run, k): k for k in live}
-                for fut in cf.as_completed(futs):
-                    k = futs[fut]
-                    try:
-                        reports.append(fut.result())
-                    except ExecutorFailure as e:
-                        failed.append(k)
-        else:
-            for k in live:
-                try:
-                    reports.append(run(k))
-                except ExecutorFailure:
-                    failed.append(k)
-
-        # ---- fault handling: re-run failed queues on the survivors -------
-        if failed:
-            for rep in reports:
-                done_clients.update(rep.completed_clients)
-            survivors = [k for k in live if k not in failed]
-            if not survivors:
-                raise RuntimeError("all executors failed")
-            # dedup by client: with backup duplicates a task can sit in two
-            # failed queues at once and must still re-run (and fold) once
-            leftovers: List[ClientTask] = []
-            for k in failed:
-                for t in schedule.queue(k):
-                    if t.client not in done_clients:
-                        done_clients.add(t.client)
-                        leftovers.append(t)
-                del self.executors[k]          # elastic K shrink
-            for i, t in enumerate(leftovers):  # round-robin retry placement
-                k = survivors[i % len(survivors)]
-                rep = self.executors[k].run_queue(
-                    rnd, [t], payload, self.data_by_client)
-                reports.append(rep)
-
-        # the partial that reaches aggregation is the one that crossed the
-        # wire: compress once, ship, and aggregate the decompressed copy
-        # (error-feedback residuals and the aggregated values stay in sync)
-        for rep in reports:
-            self.comm.executor_send(rep.executor,
-                                    self._maybe_compress(rep.partial),
-                                    tag="partial")
-            rep.partial = self._maybe_decompress(
-                self.comm.recv_from_executor(rep.executor, tag="partial"))
-        return reports, len(failed)
-
     def _maybe_compress(self, partial: Dict) -> Dict:
         if self.compressor is None:
             return partial
@@ -213,71 +179,10 @@ class ParrotServer:
 
     # ------------------------------------------------------------------
     def run_round(self) -> RoundMetrics:
-        rnd = self.round
-        t_wall = time.perf_counter()
-        if self._next_tasks is not None:
-            tasks, self._next_tasks = self._next_tasks, None
-        else:
-            tasks = self.select_clients()
-
-        # compute-comm overlap: the schedule for this round may have been
-        # prepared while the previous round's global reduce was in flight
-        # (host-side O(K·M_p) work hidden behind the collective).
-        if self._pending_schedule is not None:
-            schedule, overlapped = self._pending_schedule, True
-            self._pending_schedule = None
-        else:
-            schedule, overlapped = self.scheduler.schedule(
-                rnd, tasks, list(self.executors)), False
-
-        payload = self.algorithm.broadcast_payload(self.params,
-                                                   self.server_state)
-        skip_map, n_backups = self._plan_backups(schedule)
-        reports, n_failed = self._dispatch(rnd, schedule, payload, skip_map)
-
-        # ---- aggregation ------------------------------------------------
-        # overlap: prepare round r+1's schedule "while the reduce is in
-        # flight" (before the global_aggregate below consumes the partials)
-        if self.overlap_scheduling:
-            self.estimator.record_many(
-                [rec for r in reports for rec in r.records])
-            self._next_tasks = self.select_clients()
-            self._pending_schedule = self.scheduler.schedule(
-                rnd + 1, self._next_tasks, list(self.executors))
-
-        partials = [r.partial for r in reports]   # already the wire copies
-        ops = self.algorithm.ops()
-        agg = global_aggregate(partials, ops)
-        agg["_n_selected"] = sum(r.n_tasks for r in reports)
-        self.params, self.server_state = self.algorithm.server_update(
-            self.params, agg, self.server_state, len(self.data_by_client))
-
-        # ---- bookkeeping --------------------------------------------------
-        records = [rec for r in reports for rec in r.records]
-        err = float("nan")
-        if self.estimator.last_fit:
-            err = self.estimator.estimation_error(self.estimator.last_fit,
-                                                  records)
-        if not self.overlap_scheduling:   # overlap path already recorded them
-            self.estimator.record_many(records)
-        makespan = max((r.virtual_time for r in reports), default=0.0)
-        stats = self.comm.stats.reset()
-        metrics = RoundMetrics(
-            round=rnd, makespan=makespan,
-            wall_time=time.perf_counter() - t_wall,
-            schedule_time=0.0 if overlapped else schedule.schedule_time_s,
-            estimate_time=0.0 if overlapped else schedule.estimate_time_s,
-            predicted_makespan=schedule.predicted_makespan,
-            comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
-            n_clients=len(tasks), n_executors=len(self.executors),
-            estimation_error=err, failures=n_failed,
-            extra={"backup_tasks": float(n_backups)})
-        self.history.append(metrics)
-        self.round += 1
-
-        if self.checkpoint_manager is not None:
-            self.checkpoint_manager.maybe_save(self)
-        return metrics
+        """One server round under the configured engine: a full BSP barrier,
+        a deadline-bounded semi-sync round, or one bounded-staleness update
+        window (see ``core/engine.py``)."""
+        return self.engine.run_round(self)
 
     def run(self, n_rounds: int) -> List[RoundMetrics]:
         return [self.run_round() for _ in range(n_rounds)]

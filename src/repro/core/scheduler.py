@@ -16,12 +16,21 @@ Schedulers:
   parrot   — Algorithm 3 with the fitted workload model (warmup: uniform)
   uniform  — uniformly split |M^r| across executors (paper warmup / ablation)
   none     — arrival-order round-robin (emulates unscheduled FA-Dist)
+
+Chunk granularity (event-driven engines, DESIGN.md §3): the semi-sync and
+async engines execute queues in *chunks* of a few tasks and re-schedule at
+chunk completion events — :func:`split_chunks` cuts a queue,
+:func:`predict_span` prices a chunk under a fitted model, and
+:func:`pick_steal_victim` finds the predicted-slowest queue for an idle
+executor to steal from.  :meth:`Schedule.remap` re-homes queues that a
+pre-computed (overlapped) schedule assigned to an executor that has since
+died — without it those clients would silently never run.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.workload import DEFAULT_MODEL, WorkloadEstimator, WorkloadModel
 
@@ -45,6 +54,29 @@ class Schedule:
     @property
     def max_queue_len(self) -> int:
         return max((len(v) for v in self.assignment.values()), default=0)
+
+    def remap(self, live: Sequence[int]) -> int:
+        """Re-home queues assigned to executors not in ``live``.
+
+        A schedule computed ahead of time (compute-comm overlap) can outlive
+        its executor set: an executor that died after the schedule was built
+        still owns a queue here, and the dispatch loop — which iterates live
+        executors only — would silently drop those clients.  Orphaned tasks
+        are appended round-robin onto the live queues (deterministic: orphan
+        ids and live ids both in sorted order).  Returns the number of tasks
+        re-homed.
+        """
+        live = sorted(live)
+        orphans = sorted(k for k in self.assignment if k not in set(live))
+        if not orphans or not live:
+            return 0
+        moved = 0
+        for dead in orphans:
+            for t in self.assignment.pop(dead):
+                self.assignment.setdefault(live[moved % len(live)],
+                                           []).append(t)
+                moved += 1
+        return moved
 
 
 def _uniform(tasks: Sequence[ClientTask], executors: Sequence[int]) -> Dict[int, List[ClientTask]]:
@@ -103,6 +135,56 @@ class ParrotScheduler:
             w[best_k] = best_w
         return Schedule(assignment, max(w.values(), default=0.0),
                         time.perf_counter() - t0, est_time)
+
+
+# ---------------------------------------------------------------------------
+# chunk-granular helpers (event-driven engines)
+# ---------------------------------------------------------------------------
+
+def split_chunks(tasks: Sequence[ClientTask],
+                 chunk_size: int) -> List[List[ClientTask]]:
+    """Cut a queue into chunks of at most ``chunk_size`` tasks (queue order
+    preserved — chunks are the engines' unit of dispatch, fold and steal)."""
+    chunk_size = max(1, int(chunk_size))
+    tasks = list(tasks)
+    return [tasks[i:i + chunk_size] for i in range(0, len(tasks), chunk_size)]
+
+
+def predict_span(model: Optional[WorkloadModel],
+                 tasks: Sequence[ClientTask]) -> float:
+    """Predicted virtual duration of one chunk run on an executor: Eq. 2 at
+    the chunk's total sample count (chunk records fit b per chunk, so one
+    offset per span — not one per task).  No model yet -> 0.0, i.e. always
+    optimistic during warmup."""
+    if model is None or not tasks:
+        return 0.0
+    return model.predict(sum(t.n_samples for t in tasks))
+
+
+def predict_remaining(model: Optional[WorkloadModel],
+                      tasks: Sequence[ClientTask], chunk_size: int) -> float:
+    """Predicted time to drain a queue chunk-by-chunk."""
+    return sum(predict_span(model, c) for c in split_chunks(tasks, chunk_size))
+
+
+def pick_steal_victim(queues: Dict[int, List[ClientTask]],
+                      avail: Dict[int, float],
+                      models: Dict[int, WorkloadModel],
+                      thief: int, chunk_size: int) -> Optional[int]:
+    """The executor an idle ``thief`` should steal a chunk from: the one
+    whose *predicted completion time* (availability + remaining queue under
+    its fitted model) is largest — the predicted straggler.  Ties break on
+    the lower executor id (deterministic).  Returns None when nobody has
+    stealable work."""
+    best_k, best_t = None, -float("inf")
+    for k in sorted(queues):
+        if k == thief or not queues[k]:
+            continue
+        done_at = avail.get(k, 0.0) + predict_remaining(
+            models.get(k), queues[k], chunk_size)
+        if done_at > best_t:
+            best_k, best_t = k, done_at
+    return best_k
 
 
 def makespan(assignment: Dict[int, List[ClientTask]],

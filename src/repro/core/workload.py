@@ -8,6 +8,15 @@ with ``t_k^sample`` and ``b_k`` fitted by least squares on *measured*
 (N_m, T̂_{m,k}) pairs recorded by the executors.  The Time-Window variant
 (§4.4, "Tackling Dynamic Hardware Environments") restricts the fit to the
 most recent ``tau`` rounds so drifting device speeds don't poison the model.
+
+Under the event-driven round engines (semi-sync / async) the unit of
+execution is a *chunk* of tasks rather than a single client, and timing is
+recorded per chunk: one :class:`RunRecord` with ``n_samples`` = the chunk's
+total sample count, ``time`` = the chunk's virtual duration and ``n_tasks``
+= the number of clients it covered.  Eq. 2 is linear in N, so chunk records
+fit the same model (the offset ``b`` then absorbs per-chunk instead of
+per-task overhead — consistent as long as predictions are made at the same
+granularity, which the engines do).
 """
 from __future__ import annotations
 
@@ -21,10 +30,11 @@ import numpy as np
 @dataclass(frozen=True)
 class RunRecord:
     round: int
-    client: int
+    client: int          # first client of the span (chunk records cover more)
     executor: int
-    n_samples: int
+    n_samples: int       # total samples in the span
     time: float
+    n_tasks: int = 1     # clients covered: 1 (per-client) or chunk size
 
 
 @dataclass

@@ -9,6 +9,20 @@ from __future__ import annotations
 import jax
 
 
+def use_mesh(mesh):
+    """Version-portable ``with use_mesh(mesh):`` context.
+
+    ``jax.set_mesh`` only exists on jax >= 0.6; 0.5 has
+    ``jax.sharding.use_mesh``; on 0.4.x the ``Mesh`` object itself is the
+    context manager.  The dry-run path must run on all three.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -19,8 +19,9 @@ import jax
 from repro.configs.registry import get_arch
 from repro.configs.base import shape_by_name, ShapeConfig
 from repro.launch.inputs import input_specs
+from repro.launch.mesh import use_mesh
 from repro.sharding import enable_activation_policy
-from repro.launch.hlo_analysis import collective_stats, compute_stats
+from repro.launch.hlo_analysis import collective_stats, compute_stats, cost_dict
 
 arch, kind = sys.argv[1], sys.argv[2]
 cfg = get_arch(arch)
@@ -36,7 +37,7 @@ shape = {"train": ShapeConfig("t", 128, 8, "train"),
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 enable_activation_policy(mesh)
 spec = input_specs(cfg, shape, mesh)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     lowered = jax.jit(spec.step_fn, in_shardings=spec.in_shardings,
                       donate_argnums=spec.donate_argnums).lower(*spec.args)
     compiled = lowered.compile()
@@ -45,7 +46,7 @@ out = {
     "mem": int(compiled.memory_analysis().temp_size_in_bytes),
     "coll": collective_stats(hlo)["total_bytes_per_device"],
     "comp": compute_stats(hlo),
-    "xla_flops": compiled.cost_analysis().get("flops", 0.0),
+    "xla_flops": cost_dict(compiled).get("flops", 0.0),
 }
 print("RESULT" + json.dumps(out))
 """
