@@ -3,7 +3,9 @@
 Layout:
   <dir>/step_<round>/
       server.pkl          — params, server optimizer/algorithm state, RNG,
-                            estimator history, round counter
+                            estimator history, round counter, engine
+                            in-flight state (async pipeline / semi-sync
+                            carry pool; see RoundEngine.state_dict)
       state/              — client-state shard files (hard-linked from the
                             state managers; incremental)
       MANIFEST.json       — written LAST; a checkpoint without a manifest is
@@ -53,6 +55,11 @@ class CheckpointManager:
                     k: list(v) for k, v in server.estimator._records.items()},
                 "history": server.history,
                 "executor_ids": sorted(server.executors),
+                # engine in-flight state (async pipeline / semi-sync carry):
+                # host-side plain data via RoundEngine.state_dict, so a
+                # restore resumes the discrete-event pipeline exactly where
+                # the save left it (None for the stateless BSP engine)
+                "engine": server.engine.state_dict(),
                 "time": time.time(),
             }
             with open(os.path.join(tmp, "server.pkl"), "wb") as f:
@@ -101,6 +108,7 @@ class CheckpointManager:
             server.estimator._records[int(k)] = list(v)
         server.history = list(blob["history"])
         server.round = blob["round"]
+        server.engine.load_state_dict(blob.get("engine"))
         state_dir = os.path.join(step_dir, "state")
         if os.path.isdir(state_dir):
             for ex in server.executors.values():

@@ -11,6 +11,12 @@ level deeper.
 ``spmd_global_aggregate`` takes the per-executor partials stacked on the
 leading axis, shards them over a mesh axis, and reduces with a single
 collective; it matches ``aggregation.global_aggregate`` exactly (tested).
+The device-placement layer (``core/placement.py``) realises the same idea
+for device-pinned executors without ever host-gathering: per-device partial
+buffers are assembled zero-copy into one sharded array and reduced with a
+single ``shard_map``/``psum`` per weight group.  ``CollectiveComm`` keeps
+payloads in its inbox by reference, so device-resident buffers ship without
+a host round-trip here too.
 Flat-buffer partials (the ``LocalAggregator`` wire format) reduce even
 better: ONE collective per weight group — the whole multi-entry partial is
 a single contiguous (n,) buffer — instead of one per entry/leaf.
@@ -57,9 +63,14 @@ def spmd_global_aggregate(partials: List[Dict], ops: Dict[str, Any],
         # flat wire format: one sharded reduction per weight group covers
         # every reducible entry at once
         def reduce_group(bufs):
+            from repro.sharding.specs import stacked_partial_spec
             x = jnp.stack(bufs)
             if mesh is not None and len(bufs) % mesh.shape[axis] == 0:
-                x = jax.device_put(x, NamedSharding(mesh, P(axis, None)))
+                # the caller's single reduction axis, NOT all dp axes: the
+                # divisibility guard above only checks `axis` (multi-pod
+                # meshes reduce pod-locally here)
+                x = jax.device_put(x, NamedSharding(
+                    mesh, stacked_partial_spec(mesh, axes=(axis,))))
             return jnp.sum(x, axis=0)
 
         return reduce_flat_partials(partials, ops, reduce_group)

@@ -3,6 +3,13 @@
 Messages are passed by reference (zero-copy, like executors sharing a host)
 but *accounted* at their serialised size, so the comm-complexity benchmarks
 measure exactly what a networked transport would move.
+
+Device residency (DESIGN.md §8): because messages move by reference, a
+device-resident flat partial from a pinned executor reaches the server-side
+fold as the SAME buffers, still committed to the executor's device — no
+host round-trip, no copy, and no sync (the byte accounting reads shapes and
+dtypes only, never values).  Cross-device placement happens exactly once,
+inside the sharded/colocating global fold.
 """
 from __future__ import annotations
 

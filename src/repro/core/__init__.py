@@ -8,6 +8,7 @@
   client_step.py             — compiled client-training engine (jit-scan
                                local SGD, vmapped client blocks)
   executor.py / round.py     — sequential executors + Parrot server (Alg. 2)
+  placement.py               — executor→device pinning + sharded global fold
   engine.py / clock.py       — event-driven round engines (BSP / semi-sync /
                                async bounded-staleness) on a shared
                                virtual-time event queue
@@ -23,6 +24,7 @@ from repro.core.clock import TickTimer, VirtualClock
 from repro.core.engine import (AsyncEngine, BSPEngine, RoundEngine,
                                SemiSyncEngine, make_engine)
 from repro.core.executor import SequentialExecutor
+from repro.core.placement import DevicePlacement
 from repro.core.round import ParrotServer, RoundMetrics, run_flat_reference
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
 from repro.core.state_manager import ClientStateManager, owner_host
@@ -30,7 +32,8 @@ from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
 
 __all__ = [
     "ALGORITHMS", "AsyncEngine", "BSPEngine", "ClientData", "ClientResult",
-    "ClientStateManager", "ClientStepEngine", "ClientTask", "FLAlgorithm",
+    "ClientStateManager", "ClientStepEngine", "ClientTask", "DevicePlacement",
+    "FLAlgorithm",
     "FlatLayout", "LocalAggregator", "Op", "ParrotScheduler",
     "ParrotServer", "RoundEngine", "RoundMetrics", "RunRecord", "Schedule",
     "SemiSyncEngine", "SequentialExecutor", "TickTimer", "VirtualClock",

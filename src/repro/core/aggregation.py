@@ -93,11 +93,16 @@ class LocalAggregator:
 
     def __init__(self, ops: Dict[str, Op], use_kernel: bool = False,
                  micro_batch: int = 16,
-                 layout: Optional[FlatLayout] = None):
+                 layout: Optional[FlatLayout] = None,
+                 device: Optional[Any] = None):
         self.ops = dict(ops)
         self.use_kernel = use_kernel
         self.micro_batch = max(1, int(micro_batch))
         self.layout = layout
+        # owning device (device-pinned executors): accumulators, staged
+        # buffers and the folds all live there; the partial ships
+        # device-resident
+        self.device = device
         self._acc: Optional[Dict[str, jnp.ndarray]] = None
         self._staged: Dict[str, List[jnp.ndarray]] = {}
         self._staged_w: Dict[str, List[float]] = {}
@@ -120,7 +125,7 @@ class LocalAggregator:
             self._weights[name] = self._weights.get(name, 0.0) + w
             self._counts[name] = self._counts.get(name, 0) + 1
         self._ensure_acc(payload)
-        for g, buf in self.layout.flatten(payload).items():
+        for g, buf in self.layout.flatten(payload, self.device).items():
             self._staged[g].append(buf)
             self._staged_w[g].append(
                 result.weight if g == "weighted" else 1.0)
@@ -133,12 +138,15 @@ class LocalAggregator:
         if self.layout is None:
             self.layout = FlatLayout.build(self.ops, template_payload)
         if self._acc is None:
-            self._acc = self.layout.zeros()
+            self._acc = self.layout.zeros(self.device)
             self._staged = {g: [] for g in self._acc}
             self._staged_w = {g: [] for g in self._acc}
             # zero rows that pad the final kernel flush up to B (shared)
             self._pad = {g: jnp.zeros((n,), self.layout.group_dtypes[g])
                          for g, n in self.layout.group_sizes.items()}
+            if self.device is not None:
+                self._pad = {g: jax.device_put(b, self.device)
+                             for g, b in self._pad.items()}
 
     def fold_block(self, stacked: Dict[str, Any],
                    weights: List[float]) -> None:
@@ -168,7 +176,7 @@ class LocalAggregator:
         if self.layout is None or self._acc is None:
             self._ensure_acc({name: jax.tree.map(lambda x: x[0], val)
                               for name, val in stacked.items()})
-        bufs = self.layout.flatten_batch(stacked)
+        bufs = self.layout.flatten_batch(stacked, self.device)
         for g, D in bufs.items():
             w = jnp.asarray(weights if g == "weighted" else [1.0] * B,
                             jnp.float32)
@@ -223,6 +231,14 @@ class LocalAggregator:
 # staleness weighting (async bounded-staleness engine)
 # ---------------------------------------------------------------------------
 
+def _colocate(x: Any, like: Any) -> Any:
+    """Place ``x`` so it can combine with ``like`` (device-pinned executors
+    produce partials committed to different devices; combining them raises
+    in jax unless one side moves — a direct D2D copy, no host round-trip)."""
+    from repro.core.placement import colocate
+    return colocate(x, like)
+
+
 def merge_partials(acc: Optional[Dict[str, Any]],
                    partial: Dict[str, Any]) -> Dict[str, Any]:
     """Fold one partial into a running partial-of-partials (same wire
@@ -250,12 +266,13 @@ def merge_partials(acc: Optional[Dict[str, Any]],
             raise ValueError("flat partials built under different layouts")
         bufs = acc["sums"]["buffers"]
         for g, b in partial["sums"]["buffers"].items():
-            bufs[g] = bufs[g] + b if g in bufs else b
+            bufs[g] = bufs[g] + _colocate(b, bufs[g]) if g in bufs else b
     else:
         sums = acc["sums"]
         for name, v in partial["sums"].items():
-            sums[name] = (jax.tree.map(lambda x, y: x + y, sums[name], v)
-                          if name in sums else v)
+            sums[name] = (jax.tree.map(
+                lambda x, y: x + _colocate(y, x), sums[name], v)
+                if name in sums else v)
     for field_ in ("weights", "counts"):
         dst = acc[field_]
         for k, v in partial.get(field_, {}).items():
@@ -309,7 +326,7 @@ def scale_partial(partial: Dict[str, Any], gamma: float) -> Dict[str, Any]:
 def _sum_buffers(bufs: List[jnp.ndarray]) -> jnp.ndarray:
     total = bufs[0]
     for b in bufs[1:]:
-        total = total + b
+        total = total + _colocate(b, total)
     return total
 
 
@@ -378,7 +395,9 @@ def global_aggregate(partials: List[Dict[str, Any]],
         sums = [p["sums"][name] for p in partials if name in p["sums"]]
         if not sums:
             continue
-        total = jax.tree.map(lambda *xs: sum(xs), *sums)
+        total = jax.tree.map(
+            lambda *xs: _sum_buffers(list(xs)) if hasattr(xs[0], "sharding")
+            else sum(xs), *sums)
         if op is Op.SUM:
             out[name] = total
         elif op is Op.AVG:

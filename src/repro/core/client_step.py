@@ -28,11 +28,13 @@ exactly those clients.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core.aggregation import ClientResult
 from repro.core.algorithms import ClientData, FLAlgorithm
@@ -109,24 +111,86 @@ def stack_batches(data: ClientData, *, assume_uniform: bool = False
     return stacked, mask
 
 
+class PlacedCache:
+    """Single-slot identity-keyed memo of 'host object(s) -> placed copy'.
+
+    Payload placement is memoized in three spots (executor payload pin,
+    engine commit, gang replication) — one helper keeps the invalidation
+    semantics (same object identity ⇒ same placed copy) in one place."""
+
+    __slots__ = ("_key", "_val")
+
+    def __init__(self):
+        self._key = None
+        self._val = None
+
+    def get(self, key_objs: Tuple, place: Callable[[], Any]) -> Any:
+        if self._key is None or len(self._key) != len(key_objs) or \
+                any(a is not b for a, b in zip(self._key, key_objs)):
+            self._val = place()
+            self._key = tuple(key_objs)
+        return self._val
+
+    def clear(self) -> None:
+        self._key = self._val = None
+
+
 class ClientStepEngine:
-    """One compiled scan (and its vmapped block form) per algorithm.
+    """One compiled scan (and its vmapped block form) per (algorithm,
+    device).
 
     jax.jit owns the executable cache: one entry per distinct (payload
     shapes, state shapes, batch bucket) for the single-client scan, plus one
     per block bucket for the vmapped form — cached across rounds and
-    clients.  Executors sharing an algorithm instance share the engine (and
-    therefore the cache) through :func:`engine_for`.
+    clients.  Executors sharing an algorithm instance *and* a device share
+    the engine (and therefore the cache) through :func:`engine_for`; a
+    device-pinned engine commits its inputs to that device, so its
+    executables compile for — and its outputs stay resident on — exactly
+    that device (an uncommitted input would silently drag the computation
+    onto the process default device, serializing every executor on it).
+
+    Donation: the vmapped block form donates its freshly-stacked (B, ...)
+    batch/mask arrays on accelerator backends (rebuilt per call).  The
+    single-client form does NOT donate batches — they may come from the
+    executor's device-resident stacked-batch cache and must survive the
+    call.
     """
 
-    def __init__(self, algorithm: FLAlgorithm):
+    def __init__(self, algorithm: FLAlgorithm, device=None):
         self.algorithm = algorithm
+        self.device = device
         self.n_dispatches = 0       # compiled calls issued (bench metric)
         donate = jax.default_backend() in ("tpu", "gpu")
         kw = dict(donate_argnums=(2, 3)) if donate else {}
-        self._run_jit = jax.jit(self._run_one, **kw)
+        self._run_jit = jax.jit(self._run_one)
         self._run_block_jit = jax.jit(
             jax.vmap(self._run_one, in_axes=(None, 0, 0, 0)), **kw)
+        # fused on-device block stack for cached (device-resident) preps:
+        # one compiled dispatch per (B, shapes) instead of one eager
+        # jnp.stack per pytree leaf per block (eager ops re-trace, and at
+        # dispatch-bound block sizes that per-block churn dominates)
+        self._stack_jit = jax.jit(
+            lambda bats, masks: (jax.tree.map(lambda *xs: jnp.stack(xs),
+                                              *bats), jnp.stack(masks)))
+        self._payload_cache = PlacedCache()
+        self._gang_payload_cache = PlacedCache()
+
+    def _commit(self, tree: Any) -> Any:
+        """Commit a pytree to the engine's device (no-op copies for leaves
+        already resident there; identity when the engine is unpinned)."""
+        if self.device is None:
+            return tree
+        return jax.device_put(tree, self.device)
+
+    def _commit_payload(self, payload: Dict) -> Dict:
+        """Commit the broadcast payload once per payload object: callers
+        re-use one payload across every block of a round (and the async
+        engine across rounds), so the per-leaf device_put walk — pure host
+        overhead at dispatch-bound block sizes — must not repeat per call."""
+        if self.device is None:
+            return payload
+        return self._payload_cache.get(
+            (payload,), lambda: jax.device_put(payload, self.device))
 
     # ------------------------------------------------------------------
     def _run_one(self, payload: Dict, state: Optional[Pytree], batches: Any,
@@ -152,24 +216,38 @@ class ClientStepEngine:
     # ------------------------------------------------------------------
     def run_client(self, payload: Dict, data: ClientData,
                    state: Optional[Pytree] = None, *,
-                   assume_uniform: bool = False
+                   assume_uniform: bool = False,
+                   prep: Optional[Tuple[Any, Any]] = None
                    ) -> Tuple[ClientResult, Optional[Pytree]]:
         """Compiled drop-in for ``algorithm.client_update``: one dispatch for
         the whole tau-step local update (eager fallback on ragged batches;
         ``assume_uniform=True`` skips the ragged walk when the caller
-        already checked the signature)."""
-        prep = stack_batches(data, assume_uniform=assume_uniform)
+        already checked the signature).  ``prep`` supplies a pre-stacked
+        (batches, mask) pair — typically device-resident from the
+        executor's stacked-batch cache — skipping the host stack."""
+        if prep is None:
+            prep = stack_batches(data, assume_uniform=assume_uniform)
         if prep is None:
             return self.algorithm.client_update(payload, data, state)
         batches, mask = prep
         self.n_dispatches += 1
-        out_payload, new_state = self._run_jit(payload, state, batches,
-                                               jnp.asarray(mask))
+        # state may be uncommitted (it then follows the committed payload /
+        # batches onto the device) — only payload and host-built batches
+        # need explicit placement
+        on_device = hasattr(jax.tree.leaves(batches)[0], "sharding") \
+            if jax.tree.leaves(batches) else False
+        if not on_device:
+            batches, mask = self._commit(batches), self._commit(
+                jnp.asarray(mask))
+        out_payload, new_state = self._run_jit(
+            self._commit_payload(payload), state, batches,
+            jnp.asarray(mask))
         return (ClientResult(out_payload, self.algorithm.ops(),
                              weight=float(data.n_samples)), new_state)
 
     def run_block(self, payload: Dict, datas: Sequence[ClientData],
-                  states: Optional[Sequence[Pytree]] = None
+                  states: Optional[Sequence[Pytree]] = None,
+                  preps: Optional[Sequence[Tuple[Any, Any]]] = None
                   ) -> Tuple[Dict[str, Any], Optional[List[Pytree]]]:
         """One vmapped compiled scan over a block of B same-signature
         clients (the caller groups by :func:`batch_signature`).  Returns the
@@ -178,15 +256,26 @@ class ClientStepEngine:
 
         The block is padded to the power-of-two bucket with replicas of the
         first client; padded rows are sliced off before returning, so the
-        caller never sees them."""
+        caller never sees them.  ``preps`` supplies per-client pre-stacked
+        (batches, mask) pairs (the executor's device-resident cache); the
+        block stack then runs on the owning device (``jnp.stack``) instead
+        of re-staging O(block data) through the host every round."""
         B = len(datas)
         B_pad = _bucket(B)
         try:
-            preps = [stack_batches(d, assume_uniform=True) for d in datas]
-            preps = preps + [preps[0]] * (B_pad - B)
-            batches = jax.tree.map(lambda *xs: np.stack(xs),
-                                   *[p[0] for p in preps])
-            mask = np.stack([p[1] for p in preps])
+            if preps is None:
+                preps = [stack_batches(d, assume_uniform=True)
+                         for d in datas]
+            preps = list(preps) + [preps[0]] * (B_pad - B)
+            first = jax.tree.leaves(preps[0][0])
+            on_device = bool(first) and hasattr(first[0], "sharding")
+            if on_device:
+                batches, mask = self._stack_jit([p[0] for p in preps],
+                                                [p[1] for p in preps])
+            else:
+                batches = jax.tree.map(lambda *xs: np.stack(xs),
+                                       *[p[0] for p in preps])
+                mask = np.stack([p[1] for p in preps])
         except ValueError as e:
             raise ValueError("ragged or mixed-shape client batches cannot "
                              "be blocked; group by batch_signature() first"
@@ -195,15 +284,80 @@ class ClientStepEngine:
         if states is not None:
             padded = list(states) + [states[0]] * (B_pad - B)
             sstates = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+        if not on_device:
+            batches, mask = self._commit(batches), self._commit(
+                jnp.asarray(mask))
         self.n_dispatches += 1
         out_payload, new_states = self._run_block_jit(
-            payload, sstates, batches, jnp.asarray(mask))
+            self._commit_payload(payload), sstates, batches,
+            jnp.asarray(mask))
         if B_pad > B:
             out_payload = jax.tree.map(lambda x: x[:B], out_payload)
         if states is None:
             return out_payload, None
         return out_payload, [jax.tree.map(lambda x: x[i], new_states)
                              for i in range(B)]
+
+    # ------------------------------------------------------------------
+    def run_blocks_sharded(self, payload: Dict, preps, states, mesh
+                           ) -> List[Tuple[Dict[str, Any], Any]]:
+        """One SPMD dispatch running K same-bucket client blocks, one per
+        mesh device (DESIGN.md §8 gang dispatch).
+
+        ``preps``: K pairs of (stacked batches pytree (B, ...), mask
+        (B, n)), the k-th committed to the k-th mesh device, all with equal
+        B and shapes.  ``states``: K stacked state pytrees (or None).  The
+        per-device pieces are assembled zero-copy into global ``(K·B, ...)``
+        arrays sharded ``P("data")`` over the mesh, and the SAME vmapped
+        scan executable runs them — XLA partitions the vmap axis, so the K
+        blocks execute *concurrently*, one per device, in a single
+        execution (separate single-device dispatches serialize in the CPU
+        PJRT client; SPMD executions fan out per-device threads — this is
+        where the CPU device-count speedup physically comes from).
+
+        Returns K ``(stacked result payload, stacked new states)`` pairs,
+        each left resident on its own device."""
+        devices = list(mesh.devices.flat)
+        K = len(devices)
+        assert len(preps) == K
+        row = NamedSharding(mesh, P("data"))
+
+        def assemble(pieces):
+            pieces = [jnp.asarray(p) for p in pieces]
+            shape = (K * pieces[0].shape[0],) + pieces[0].shape[1:]
+            return jax.make_array_from_single_device_arrays(
+                shape, row, pieces)
+
+        batches = jax.tree.map(lambda *xs: assemble(xs),
+                               *[p[0] for p in preps])
+        mask = assemble([p[1] for p in preps])
+        sstates = None
+        if states is not None:
+            sstates = jax.tree.map(lambda *xs: assemble(xs), *states)
+        repl = self._gang_payload_cache.get(
+            (payload, mesh),
+            lambda: jax.device_put(payload, NamedSharding(mesh, P())))
+        self.n_dispatches += 1
+        out_payload, new_states = self._run_block_jit(repl, sstates,
+                                                      batches, mask)
+
+        def split_tree(tree):
+            """tree of (K·B, ...) sharded arrays -> K trees of (B, ...)
+            single-device arrays, each still resident on its device
+            (addressable shards — no gather, no copy)."""
+            leaves, treedef = jax.tree.flatten(tree)
+            parts = []
+            for leaf in leaves:
+                by_dev = {s.device.id: s.data
+                          for s in leaf.addressable_shards}
+                parts.append([by_dev[d.id] for d in devices])
+            return [jax.tree.unflatten(treedef, [p[k] for p in parts])
+                    for k in range(K)]
+
+        payloads = split_tree(out_payload)
+        state_parts = (split_tree(new_states) if new_states is not None
+                       else [None] * K)
+        return list(zip(payloads, state_parts))
 
     # ------------------------------------------------------------------
     def compile_count(self) -> int:
@@ -216,11 +370,20 @@ class ClientStepEngine:
         return total
 
 
-def engine_for(algorithm: FLAlgorithm) -> ClientStepEngine:
-    """The algorithm instance's engine (executors sharing the algorithm
-    share one compile cache)."""
-    eng = getattr(algorithm, "_step_engine", None)
+def engine_for(algorithm: FLAlgorithm,
+               device=None) -> ClientStepEngine:
+    """The algorithm instance's engine for ``device`` (executors sharing
+    the algorithm *and* the device share one compile cache).
+
+    The cache is keyed on the device id: a multi-device run gets one engine
+    — one set of executables — per device, so executors can never thrash a
+    shared cache or be handed an executable compiled (and resident) on
+    another executor's device."""
+    cache = getattr(algorithm, "_step_engines", None)
+    if cache is None:
+        cache = algorithm._step_engines = {}
+    key = getattr(device, "id", None) if device is not None else None
+    eng = cache.get(key)
     if eng is None:
-        eng = ClientStepEngine(algorithm)
-        algorithm._step_engine = eng
+        eng = cache[key] = ClientStepEngine(algorithm, device=device)
     return eng

@@ -43,13 +43,35 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.core.aggregation import (global_aggregate, merge_partials,
-                                    scale_partial, staleness_weight)
+import jax
+import numpy as np
+
+from repro.core.aggregation import (merge_partials, scale_partial,
+                                    staleness_weight)
 from repro.core.clock import VirtualClock
 from repro.core.executor import ExecutorFailure, ExecutorReport
 from repro.core.scheduler import (ClientTask, Schedule, pick_steal_victim,
                                   predict_remaining, predict_span)
 from repro.core.workload import RunRecord
+
+
+def _host_tree(tree):
+    """Device arrays -> host numpy for checkpoint blobs; everything else
+    (floats, FlatLayout leaves, RunRecords) passes through untouched."""
+    if tree is None:
+        return None
+    return jax.tree.map(
+        lambda x: np.asarray(x) if hasattr(x, "sharding") else x, tree)
+
+
+def _host_report(rep: ExecutorReport) -> ExecutorReport:
+    """Host-side copy of an in-flight chunk report (jax.tree.map does not
+    descend into the dataclass, so the partial converts explicitly)."""
+    return ExecutorReport(
+        executor=rep.executor, partial=_host_tree(rep.partial),
+        records=list(rep.records), virtual_time=rep.virtual_time,
+        wall_time=rep.wall_time, n_tasks=rep.n_tasks,
+        completed_clients=list(rep.completed_clients))
 
 
 @dataclass
@@ -66,12 +88,23 @@ class _ExecState:
 
 class RoundEngine:
     """One synchronization mode.  Engines may keep state across rounds (the
-    async engine does); a server owns exactly one engine instance."""
+    async engine does); a server owns exactly one engine instance.
+
+    Engines with cross-round state implement ``state_dict`` /
+    ``load_state_dict`` (plain-data, host-resident blobs) so the checkpoint
+    manager can save and deterministically resume them mid-pipeline."""
 
     mode: str = "?"
 
     def run_round(self, srv) -> "RoundMetrics":
         raise NotImplementedError
+
+    def state_dict(self) -> Optional[Dict]:
+        return None                 # stateless between rounds (BSP)
+
+    def load_state_dict(self, state: Optional[Dict]) -> None:
+        if state:
+            raise ValueError(f"engine {self.mode!r} cannot restore state")
 
     # -- shared plumbing ---------------------------------------------------
     def _chunk_size(self, srv, override: Optional[int]) -> int:
@@ -109,7 +142,7 @@ class RoundEngine:
         survivors' queues.  Tasks assigned to the dead executor *after* its
         failure event was pushed (an async refill can land in between) are
         still parked on its queue and re-home too.  Returns survivor ids."""
-        srv.executors.pop(dead, None)
+        srv._drop_executor(dead)
         dead_state = states.pop(dead, None)
         if dead_state is not None and dead_state.queue:
             remaining = list(remaining) + dead_state.queue
@@ -185,7 +218,7 @@ class BSPEngine(RoundEngine):
 
         partials = [r.partial for r in reports]   # already the wire copies
         ops = srv.algorithm.ops()
-        agg = global_aggregate(partials, ops)
+        agg = srv.global_fold(partials)
         agg["_n_selected"] = sum(r.n_tasks for r in reports)
         srv.params, srv.server_state = srv.algorithm.server_update(
             srv.params, agg, srv.server_state, len(srv.data_by_client))
@@ -233,9 +266,25 @@ class BSPEngine(RoundEngine):
                 rnd, schedule.queue(k), payload, srv.data_by_client,
                 skip_clients=(skip_map or {}).get(k))
 
+        # SPMD gang dispatch (DESIGN.md §8): under a one-executor-per-device
+        # placement, a round whose queues plan into aligned block waves runs
+        # each wave as ONE sharded execution across the mesh — per-device
+        # threads give real wall-clock overlap even where per-device
+        # dispatches serialize (CPU PJRT).  Reports come back in executor
+        # order with per-executor content identical to the serial path, so
+        # the barrier semantics (and bit-exactness) are unchanged.
+        ganged = None
+        if srv.gang_dispatch and not srv.parallel_dispatch:
+            from repro.core.executor import run_queues_ganged
+            ganged = run_queues_ganged(
+                srv.executors, rnd, {k: schedule.queue(k) for k in live},
+                payload, srv.data_by_client, srv.placement, skip_map)
         # barrier semantics: every outcome lands at t=0; seq order preserves
         # the legacy collection order
-        if srv.parallel_dispatch:
+        if ganged is not None:
+            for k in live:
+                clock.push(0.0, "queue_done", ganged[k])
+        elif srv.parallel_dispatch:
             with cf.ThreadPoolExecutor(max_workers=len(live)) as pool:
                 futs = {pool.submit(run, k): k for k in live}
                 for fut in cf.as_completed(futs):
@@ -272,7 +321,7 @@ class BSPEngine(RoundEngine):
                     if t.client not in done_clients:
                         done_clients.add(t.client)
                         leftovers.append(t)
-                del srv.executors[k]           # elastic K shrink
+                srv._drop_executor(k)          # elastic K shrink
             for i, t in enumerate(leftovers):  # round-robin retry placement
                 k = survivors[i % len(survivors)]
                 rep = srv.executors[k].run_queue(
@@ -317,6 +366,18 @@ class SemiSyncEngine(RoundEngine):
         self.deadline_frac = float(deadline_frac)
         self.chunk_size = chunk_size
         self._carry: List[ClientTask] = []
+
+    # -- checkpointing: the carry pool is the only cross-round state -------
+    def state_dict(self) -> Dict:
+        return {"mode": self.mode, "carry": list(self._carry)}
+
+    def load_state_dict(self, state: Optional[Dict]) -> None:
+        if not state:
+            return
+        if state.get("mode") != self.mode:
+            raise ValueError(f"checkpointed engine state is "
+                             f"{state.get('mode')!r}, not {self.mode!r}")
+        self._carry = list(state["carry"])
 
     def run_round(self, srv):
         from repro.core.round import RoundMetrics
@@ -385,7 +446,7 @@ class SemiSyncEngine(RoundEngine):
 
         ops = srv.algorithm.ops()
         if partials:
-            agg = global_aggregate(partials, ops)
+            agg = srv.global_fold(partials)
             agg["_n_selected"] = n_landed
             srv.params, srv.server_state = srv.algorithm.server_update(
                 srv.params, agg, srv.server_state, len(srv.data_by_client))
@@ -496,6 +557,74 @@ class AsyncEngine(RoundEngine):
         self._steals = 0
         self._stale_folds = 0
         self._stale_sum = 0.0
+
+    # -- checkpointing of the in-flight pipeline ---------------------------
+    # The engine persists across rounds, so a checkpoint taken at an update
+    # boundary still has a live pipeline: undispatched queues, in-flight
+    # chunk completions sitting in the clock (their partials already
+    # computed and folded into nothing yet), the payload version executors
+    # are training against, and the window accumulators.  All of it is
+    # serialised host-side (device arrays -> numpy) as plain data; restore
+    # rebuilds the clock heap with the exact (time, seq) ordering, so the
+    # resumed run pops the same events in the same order and stays
+    # bit-deterministic.  (Client states and the server blob ride the
+    # normal checkpoint path; the executor topology must match on restore.)
+    # Known gap: params/makespans are bit-exact, but the first resumed
+    # round's comm_bytes metric omits the round-end broadcast that the
+    # original process sent just before the checkpoint (comm stats are not
+    # part of the blob) — metrics accounting only, no effect on training.
+    def state_dict(self) -> Dict:
+        if self._states is None:
+            return {"mode": self.mode, "initialized": False}
+        clock = self._clock.state_dict()
+        clock["events"] = [
+            (t, seq, kind,
+             (data[0], _host_report(data[1]), data[2])
+             if kind == "chunk_done" else data)
+            for (t, seq, kind, data) in clock["events"]]
+        return {
+            "mode": self.mode, "initialized": True,
+            "states": {k: dict(queue=list(es.queue), t=es.t,
+                               busy_until=es.busy_until, inflight=es.inflight,
+                               offset=es.offset, stopped=es.stopped,
+                               dead=es.dead)
+                       for k, es in self._states.items()},
+            "clock": clock,
+            "in_system": sorted(self._in_system),
+            "last_update_t": self._last_update_t,
+            "payload": _host_tree(self._payload),
+            "buffer": _host_tree(self._buffer),
+            "n_folded": self._n_folded,
+            "records": list(self._records),
+            "n_failed": self._n_failed,
+            "steals": self._steals,
+            "stale_folds": self._stale_folds,
+            "stale_sum": self._stale_sum,
+            "last_sched": self._last_sched,
+        }
+
+    def load_state_dict(self, state: Optional[Dict]) -> None:
+        if not state:
+            return
+        if state.get("mode") != self.mode:
+            raise ValueError(f"checkpointed engine state is "
+                             f"{state.get('mode')!r}, not {self.mode!r}")
+        if not state.get("initialized"):
+            return
+        self._states = {k: _ExecState(**es)
+                        for k, es in state["states"].items()}
+        self._clock = VirtualClock.from_state_dict(state["clock"])
+        self._in_system = set(state["in_system"])
+        self._last_update_t = state["last_update_t"]
+        self._payload = state["payload"]
+        self._buffer = state["buffer"]
+        self._n_folded = state["n_folded"]
+        self._records = list(state["records"])
+        self._n_failed = state["n_failed"]
+        self._steals = state["steals"]
+        self._stale_folds = state["stale_folds"]
+        self._stale_sum = state["stale_sum"]
+        self._last_sched = state["last_sched"]
 
     # ------------------------------------------------------------------
     def _ensure_init(self, srv) -> None:
@@ -623,7 +752,7 @@ class AsyncEngine(RoundEngine):
 
         # ---- server update (one bounded-staleness window == one round) ---
         ops = srv.algorithm.ops()
-        agg = global_aggregate([self._buffer], ops)
+        agg = srv.global_fold([self._buffer])
         agg["_n_selected"] = self._n_folded
         srv.params, srv.server_state = srv.algorithm.server_update(
             srv.params, agg, srv.server_state, len(srv.data_by_client))

@@ -48,15 +48,39 @@ model's η), so the workload estimator keeps seeing per-client records.  The
 eager per-task path is kept for ``use_compiled_steps=False``, for ragged
 clients, and for rounds with a pending ``fail_at`` injection (task-index
 granularity must stay exact there).
+
+Device pinning (DESIGN.md §8): ``device=`` pins the executor to one local
+JAX device — the broadcast payload is committed there once per round, the
+client-step executables compile per device (``engine_for(algorithm,
+device)``), client states load onto / stay resident on it, the flat
+aggregator folds there, and the emitted partial ships device-resident.  A
+pinned executor also dispatches *steady-state* blocks without blocking
+(``nonblocking``): once a (signature, B) block cost has been measured, the
+cached cost stands in for the wall measurement and the device computation is
+left in flight — K pinned executors driven from one Python thread then
+genuinely overlap on K devices, which is where the device-count speedup
+comes from.  Virtual-time semantics are unchanged: the cached cost is
+exactly what the running-min filter would have converged to, and under a
+``TickTimer`` both paths measure identical durations (every same-shaped
+span contains the same number of timer calls), so the K-device parity tests
+stay bit-exact.
+
+Stacked-batch cache: stacking a client's batches (host stack + transfer)
+repeats every round in the vanilla path; ``batch_cache_bytes`` bounds an
+LRU cache of per-client stacked (batches, mask) arrays resident on the
+executor's device, so steady-state rounds re-use them and the block stack
+runs on-device (``jnp.stack``).
 """
 from __future__ import annotations
 
 import time
 import weakref
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import client_step
 from repro.core.aggregation import ClientResult, LocalAggregator, Op
@@ -110,7 +134,10 @@ class SequentialExecutor:
                  use_compiled_steps: bool = True,
                  client_block: int = 8,
                  fail_at: Optional[Tuple[int, int]] = None,
-                 timer: Optional[Callable[[], float]] = None):
+                 timer: Optional[Callable[[], float]] = None,
+                 device: Optional[Any] = None,
+                 nonblocking: Optional[bool] = None,
+                 batch_cache_bytes: int = 128 << 20):
         self.id = executor_id
         self.algorithm = algorithm
         self.state_manager = state_manager
@@ -119,6 +146,24 @@ class SequentialExecutor:
         self.agg_micro_batch = agg_micro_batch
         self.use_compiled_steps = use_compiled_steps
         self.client_block = max(1, int(client_block))
+        # device pin (core/placement.py): None = process default device
+        # (the pre-multi-device behaviour, bit-for-bit)
+        self.device = device
+        # non-blocking steady-state dispatch only makes sense when pinned
+        # (unpinned executors all share the default device anyway)
+        self.nonblocking = (device is not None if nonblocking is None
+                            else bool(nonblocking))
+        # LRU cache of per-client stacked (batches, mask), device-resident
+        # when pinned; 0 disables
+        self.batch_cache_bytes = int(batch_cache_bytes)
+        self._batch_cache: "OrderedDict[int, Tuple[Any, Any, Any, int]]" = \
+            OrderedDict()
+        self._batch_cache_used = 0
+        # whole-block stacks for the gang path (repeated cohorts re-use the
+        # assembled (B, ...) arrays; shares the byte budget above).  Not
+        # kept on donating backends — the block jit would invalidate them.
+        self._block_stack_cache: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        self._payload_cache = client_step.PlacedCache()
         # injectable wall-clock source (core/clock.py): the engine
         # equivalence tests swap in a deterministic TickTimer so measured
         # durations become a pure function of the code path taken
@@ -136,6 +181,105 @@ class SequentialExecutor:
         # fault-injection hook for the fault-tolerance tests:
         # (round, task_index) at which this executor dies.
         self.fail_at = fail_at
+
+    # ------------------------------------------------------------- device
+    def set_device(self, device: Optional[Any]) -> None:
+        """Re-pin the executor (placement remap after a device failure).
+        Device-resident caches are dropped; measured block costs survive
+        (they describe the computation, not the silicon it sat on)."""
+        if device is self.device:
+            return
+        self.device = device
+        self._batch_cache.clear()
+        self._block_stack_cache.clear()
+        self._batch_cache_used = 0
+        self._payload_cache.clear()
+        if self.nonblocking and device is None:
+            self.nonblocking = False
+
+    def _place_payload(self, payload: Dict) -> Dict:
+        """Commit the broadcast payload to the executor's device ONCE per
+        payload object (engines broadcast one object per round/version;
+        chunks of the same round reuse the committed copy).  This covers
+        the eager path too; the engine's own ``_commit_payload`` memo then
+        sees the placed object and its walk is a one-time no-op."""
+        if self.device is None:
+            return payload
+        return self._payload_cache.get(
+            (payload,), lambda: jax.device_put(payload, self.device))
+
+    def _prep_batches(self, client: int, data: ClientData) -> Tuple[Any, Any]:
+        """The client's stacked (batches, mask), served from the
+        device-resident LRU cache (capped at ``batch_cache_bytes``)."""
+        hit = self._batch_cache.get(client)
+        if hit is not None and hit[0]() is data:
+            self._batch_cache.move_to_end(client)
+            return hit[1], hit[2]
+        stacked, mask = client_step.stack_batches(data, assume_uniform=True)
+        if self.device is not None:
+            stacked = jax.device_put(stacked, self.device)
+            mask = jax.device_put(mask, self.device)
+        if self.batch_cache_bytes <= 0:
+            return stacked, mask
+        nbytes = int(mask.nbytes) + sum(
+            int(x.nbytes) for x in jax.tree.leaves(stacked))
+        if hit is not None:          # stale entry (dataset swapped)
+            self._batch_cache_used -= self._batch_cache.pop(client)[3]
+        self._batch_cache[client] = (weakref.ref(data), stacked, mask, nbytes)
+        self._batch_cache_used += nbytes
+        self._evict_to_budget()
+        return stacked, mask
+
+    def _evict_to_budget(self) -> None:
+        """Shrink the shared byte budget across BOTH stacked-batch caches:
+        cohort block stacks go first (they are speculative — a cohort that
+        never repeats is dead weight, and per-client entries can rebuild
+        them), then per-client LRU entries down to the last one."""
+        while self._batch_cache_used > self.batch_cache_bytes:
+            if self._block_stack_cache:
+                self._batch_cache_used -= \
+                    self._block_stack_cache.popitem(last=False)[1][3]
+            elif len(self._batch_cache) > 1:
+                self._batch_cache_used -= \
+                    self._batch_cache.popitem(last=False)[1][3]
+            else:
+                break
+
+    def _prep_block_stack(self, block: List[ClientTask],
+                          data_by_client: Dict[int, ClientData],
+                          B_pad: int) -> Tuple[Any, Any]:
+        """The block's padded (B_pad, ...) stacked batches + masks, cached
+        by cohort: repeated schedules (full participation, stable LPT
+        splits) re-dispatch the identical block every round, so the
+        assembled device arrays are re-served instead of re-stacked.
+        Falls through to a fresh stack on donating backends (the block jit
+        consumes its batch buffers there) or when caching is disabled."""
+        cacheable = (self.batch_cache_bytes > 0
+                     and jax.default_backend() not in ("tpu", "gpu"))
+        key = (tuple(t.client for t in block), B_pad)
+        if cacheable:
+            hit = self._block_stack_cache.get(key)
+            if hit is not None and all(
+                    w() is data_by_client[c]
+                    for c, w in zip(key[0], hit[0])):
+                self._block_stack_cache.move_to_end(key)
+                return hit[1], hit[2]
+        cp = [self._prep_batches(t.client, data_by_client[t.client])
+              for t in block]
+        cp = cp + [cp[0]] * (B_pad - len(block))
+        eng = client_step.engine_for(self.algorithm, self.device)
+        stacked, mask = eng._stack_jit([p[0] for p in cp],
+                                       [p[1] for p in cp])
+        if cacheable:
+            nbytes = int(mask.nbytes) + sum(
+                int(x.nbytes) for x in jax.tree.leaves(stacked))
+            refs = tuple(weakref.ref(data_by_client[c]) for c in key[0])
+            if key in self._block_stack_cache:
+                self._batch_cache_used -= self._block_stack_cache.pop(key)[3]
+            self._block_stack_cache[key] = (refs, stacked, mask, nbytes)
+            self._batch_cache_used += nbytes
+            self._evict_to_budget()
+        return stacked, mask
 
     def run_queue(self, rnd: int, tasks: List[ClientTask], payload: Dict,
                   data_by_client: Dict[int, ClientData],
@@ -166,7 +310,9 @@ class SequentialExecutor:
         agg = LocalAggregator(self.algorithm.ops(),
                               use_kernel=self.use_agg_kernel,
                               micro_batch=self.agg_micro_batch,
-                              layout=self._layout_cache)
+                              layout=self._layout_cache,
+                              device=self.device)
+        payload = self._place_payload(payload)
         records: List[RunRecord] = []
         completed: List[int] = []
         t_start = self.timer()
@@ -284,8 +430,12 @@ class SequentialExecutor:
     def _run_blocked(self, rnd, tasks, payload, data_by_client, skip_clients,
                      agg, records, completed, eta) -> float:
         """Compiled-engine path: one vmapped jit-scan per block, stacked
-        deltas folded straight into the flat aggregator."""
-        engine = client_step.engine_for(self.algorithm)
+        deltas folded straight into the flat aggregator.  Device-pinned
+        executors serve stacked batches from the on-device LRU cache and
+        dispatch steady-state blocks without blocking (the cached block
+        cost stands in for the measurement), so the device computation is
+        left in flight while the caller moves on to another executor."""
+        engine = client_step.engine_for(self.algorithm, self.device)
         todo = [t for t in tasks
                 if not (skip_clients and t.client in skip_clients)]
         vtime = 0.0
@@ -295,7 +445,7 @@ class SequentialExecutor:
             states = None
             if self.algorithm.stateful:
                 states = self.state_manager.load_many(
-                    [t.client for t in block])
+                    [t.client for t in block], device=self.device)
                 states = [s if s is not None
                           else self.algorithm.client_init_state(
                               payload["params"])
@@ -306,36 +456,63 @@ class SequentialExecutor:
             # + sync on the outputs; jax dispatch is async, so without the
             # sync it would measure host dispatch, not training); state IO
             # and the aggregation fold stay outside so the compile
-            # re-measure below can reproduce the identical span
-            def run_engine():
+            # re-measure below can reproduce the identical span.  The
+            # stacked-batch prep runs lazily INSIDE the span — the cache
+            # makes repeat rounds cheap, but the cost that IS paid must
+            # show up in the measured block time (virtual-time accounting
+            # on the unpinned default path stays faithful to the work
+            # done)
+            preps = None
+
+            def run_engine(sync: bool = True):
+                nonlocal preps
+                if preps is None:
+                    preps = [self._prep_batches(t.client,
+                                                data_by_client[t.client])
+                             for t in block]
                 if len(block) == 1:
                     res, st = engine.run_client(
                         payload, datas[0], states[0] if states else None,
-                        assume_uniform=True)
-                    jax.block_until_ready((res.payload, st))
+                        assume_uniform=True, prep=preps[0])
+                    if sync:
+                        jax.block_until_ready((res.payload, st))
                     return res, st
-                out = engine.run_block(payload, datas, states)
-                jax.block_until_ready(out)
+                out = engine.run_block(payload, datas, states, preps=preps)
+                if sync:
+                    jax.block_until_ready(out)
                 return out
 
+            cost_key = (key[1], len(block)) if kind != "eager" else None
+            steady = (self.nonblocking and cost_key is not None
+                      and cost_key in self._block_cost)
             t0 = self.timer()
             if kind == "eager":           # ragged batches: reference path
                 assert len(block) == 1
                 result, new_state = self.algorithm.client_update(
                     payload, datas[0], states[0] if states else None)
                 new_states = [new_state]
+                measured = self.timer() - t0
+            elif steady:
+                # non-blocking dispatch: the executable for this
+                # (signature, B) exists (its cost was measured), so no
+                # compile can hide in the span; the device crunches while
+                # the host dispatches the next executor's chunk
+                out = run_engine(sync=False)
+                new_states = None
+                self.timer()              # span close (call parity with
+                measured = self._block_cost[cost_key]   # the synced path)
             else:
                 out = run_engine()
                 new_states = None
-            measured = self.timer() - t0
-            # a first-seen shape just paid its one-off compile inside the
-            # timed span; re-run the (pure) computation once, result
-            # discarded, so virtual time and the workload estimator see
-            # steady-state throughput, not compile spikes
-            if kind != "eager" and client_step.compile_events() > compiles0:
-                t0 = self.timer()
-                run_engine()
                 measured = self.timer() - t0
+                # a first-seen shape just paid its one-off compile inside
+                # the timed span; re-run the (pure) computation once,
+                # result discarded, so virtual time and the workload
+                # estimator see steady-state throughput, not compile spikes
+                if client_step.compile_events() > compiles0:
+                    t0 = self.timer()
+                    run_engine()
+                    measured = self.timer() - t0
 
             if kind == "eager":
                 agg.fold(result)
@@ -352,14 +529,14 @@ class SequentialExecutor:
             if self.algorithm.stateful:
                 self.state_manager.save_many(
                     {t.client: s for t, s in zip(block, new_states)
-                     if s is not None})
+                     if s is not None},
+                    keep_device=self.device is not None)
             completed.extend(t.client for t in block)
-            if kind != "eager":
+            if cost_key is not None and not steady:
                 # steady-state filter: host-noise spikes (GC, co-tenant
                 # load) would otherwise dominate the BSP makespan now that
                 # a round is a handful of coarse blocks instead of many
                 # small tasks
-                cost_key = (key[1], len(block))
                 measured = min(measured,
                                self._block_cost.get(cost_key, measured))
                 self._block_cost[cost_key] = measured
@@ -374,6 +551,159 @@ class SequentialExecutor:
                           n_samples=t.n_samples, time=per_client)
                 for t in block)
         return vtime
+
+
+def run_queues_ganged(executors: Dict[int, "SequentialExecutor"], rnd: int,
+                      queues: Dict[int, List[ClientTask]], payload: Dict,
+                      data_by_client: Dict[int, ClientData],
+                      placement, skip_map: Optional[Dict[int, set]] = None
+                      ) -> Optional[Dict[int, "ExecutorReport"]]:
+    """SPMD gang dispatch of a whole BSP round (DESIGN.md §8).
+
+    Per-device dispatches serialize inside the CPU PJRT client (virtual
+    host devices share one execute thread), so the per-executor
+    non-blocking path cannot realise wall-clock overlap there.  This path
+    can: when every live executor is pinned to its own device and their
+    queues plan into aligned block *waves* — wave i holds every executor's
+    i-th block, all sharing one (signature, padded-B) bucket — each wave
+    runs as ONE sharded execution over the placement mesh
+    (``ClientStepEngine.run_blocks_sharded``), which XLA fans out with one
+    thread per device.  Folds, state IO and virtual-time accounting stay
+    per-executor on the per-device output shards, so reports are identical
+    in content and order to the per-executor path (and bit-identical on
+    CPU: the local shard program equals the single-device block program).
+
+    Returns executor-id -> ExecutorReport, or None when the round is not
+    gangable (heterogeneous waves, ragged/eager clients, a pending
+    ``fail_at`` injection, executors sharing devices, K == 1, ...) — the
+    caller then falls back to the ordinary per-executor dispatch."""
+    if placement is None or len(queues) < 2:
+        return None
+    live = sorted(queues)
+    exs = [executors[k] for k in live]
+    devs = [ex.device for ex in exs]
+    if any(d is None for d in devs) or \
+            len({d.id for d in devs}) != len(devs):
+        return None
+    mesh = placement.mesh()
+    if [d.id for d in mesh.devices.flat] != [d.id for d in devs]:
+        return None
+    algo = exs[0].algorithm
+    timer = exs[0].timer
+    for ex in exs:
+        if (not ex.use_compiled_steps or ex.algorithm is not algo
+                or ex.timer is not timer
+                or (ex.fail_at is not None and ex.fail_at[0] in (rnd, -1))):
+            # gang waves are timed once on the shared timer; executors with
+            # private timers keep per-executor measurement semantics via
+            # the fallback path
+            return None
+
+    # ---- plan waves -----------------------------------------------------
+    plans = []
+    for k, ex in zip(live, exs):
+        todo = [t for t in queues[k]
+                if not (skip_map and t.client in skip_map.get(k, ()))]
+        plans.append(ex._plan_blocks(todo, data_by_client))
+    n_waves = len(plans[0])
+    if any(len(p) != n_waves for p in plans):
+        return None
+    for i in range(n_waves):
+        keys = {(p[i][0], client_step._bucket(len(p[i][1]))) for p in plans}
+        if len(keys) != 1 or next(iter(keys))[0][0] != "block":
+            return None
+
+    # ---- run ------------------------------------------------------------
+    engine = client_step.engine_for(algo)       # hosts the sharded cache
+    etas = [ex.speed_model(ex.id, rnd) for ex in exs]
+    aggs, placed = [], []
+    for ex in exs:
+        aggs.append(LocalAggregator(algo.ops(), use_kernel=ex.use_agg_kernel,
+                                    micro_batch=ex.agg_micro_batch,
+                                    layout=ex._layout_cache,
+                                    device=ex.device))
+        placed.append(ex._place_payload(payload))
+    records: List[List[RunRecord]] = [[] for _ in exs]
+    completed: List[List[int]] = [[] for _ in exs]
+    vtimes = [0.0] * len(exs)
+    walls = [0.0] * len(exs)
+    gang_cost = placement._gang_cost
+
+    for i in range(n_waves):
+        blocks = [p[i][1] for p in plans]
+        sig = plans[0][i][0][1]
+        B_pad = client_step._bucket(max(len(b) for b in blocks))
+        preps, states = [], None
+        if algo.stateful:
+            states = []
+        for j, (k, ex) in enumerate(zip(live, exs)):
+            block = blocks[j]
+            preps.append(ex._prep_block_stack(block, data_by_client, B_pad))
+            if algo.stateful:
+                st = ex.state_manager.load_many(
+                    [t.client for t in block], device=ex.device)
+                st = [s if s is not None
+                      else algo.client_init_state(placed[j]["params"])
+                      for s in st]
+                st = st + [st[0]] * (B_pad - len(block))
+                states.append(jax.tree.map(lambda *xs: jnp.stack(xs), *st))
+
+        cost_key = (sig, B_pad, len(live))
+        steady = all(ex.nonblocking for ex in exs) and cost_key in gang_cost
+        compiles0 = client_step.compile_events()
+        t0 = timer()
+        outs = engine.run_blocks_sharded(payload, preps, states, mesh)
+        if steady:
+            timer()                         # span close (call parity)
+            measured = gang_cost[cost_key]
+        else:
+            jax.block_until_ready(outs)
+            measured = timer() - t0
+            if client_step.compile_events() > compiles0 \
+                    and jax.default_backend() == "cpu":
+                # first-seen bucket paid its compile in the span: re-run
+                # once from the warm cache for a steady-state measurement
+                # (CPU only: on TPU/GPU the block jit donates the batch
+                # buffers, so the wave's preps cannot be replayed)
+                t0 = timer()
+                jax.block_until_ready(
+                    engine.run_blocks_sharded(payload, preps, states, mesh))
+                measured = timer() - t0
+            measured = min(measured, gang_cost.get(cost_key, measured))
+            gang_cost[cost_key] = measured
+
+        for j, (k, ex) in enumerate(zip(live, exs)):
+            block = blocks[j]
+            out_payload, new_states = outs[j]
+            if B_pad > len(block):
+                out_payload = jax.tree.map(lambda x: x[:len(block)],
+                                           out_payload)
+            aggs[j].fold_block(
+                out_payload,
+                [float(data_by_client[t.client].n_samples) for t in block])
+            if algo.stateful and new_states is not None:
+                ex.state_manager.save_many(
+                    {t.client: jax.tree.map(lambda x: x[b], new_states)
+                     for b, t in enumerate(block)},
+                    keep_device=ex.device is not None)
+            completed[j].extend(t.client for t in block)
+            simulated = measured * (1.0 + etas[j])
+            vtimes[j] += simulated
+            walls[j] += measured
+            per_client = simulated / len(block)
+            records[j].extend(
+                RunRecord(round=rnd, client=t.client, executor=k,
+                          n_samples=t.n_samples, time=per_client)
+                for t in block)
+
+    reports = {}
+    for j, (k, ex) in enumerate(zip(live, exs)):
+        ex._layout_cache = aggs[j].layout
+        reports[k] = ExecutorReport(
+            executor=k, partial=aggs[j].partial(), records=records[j],
+            virtual_time=vtimes[j], wall_time=walls[j],
+            n_tasks=len(completed[j]), completed_clients=completed[j])
+    return reports
 
 
 class ExecutorFailure(RuntimeError):

@@ -84,8 +84,12 @@ class FlatLayout:
         self.group_sizes = group_sizes      # group  -> total element count
         self.group_dtypes = group_dtypes    # group  -> buffer dtype
         self.entry_order = entry_order      # group  -> entry names in order
-        self._flatten_jit = None            # compiled once per layout
-        self._flatten_batch_jit = None      # compiled once per layout
+        # one jit per layout; executables inside it are keyed by the input
+        # shardings, so per-device callers (``device=``) get their own
+        # executables out of the same cache — a layout shared across
+        # device-pinned executors never cross-wires or thrashes
+        self._flatten_jit = None
+        self._flatten_batch_jit = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -131,18 +135,34 @@ class FlatLayout:
             out[g] = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         return out
 
-    def flatten(self, payload: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+    @staticmethod
+    def _commit(payload: Dict[str, Any], device) -> Dict[str, Any]:
+        """Commit every leaf to ``device`` (no-op for leaves already there)
+        so the jitted flatten runs — and its output stays — on that device
+        rather than silently landing on the process default device."""
+        if device is None:
+            return payload
+        from jax.sharding import SingleDeviceSharding
+        home = SingleDeviceSharding(device)   # cheap equality per leaf
+        return jax.tree.map(
+            lambda x: x if getattr(x, "sharding", None) == home
+            else jax.device_put(x, device), payload)
+
+    def flatten(self, payload: Dict[str, Any],
+                device=None) -> Dict[str, jnp.ndarray]:
         """One contiguous 1-D buffer per group from a client payload.
 
         Jit-compiled once per layout (flatten-once): the whole
         ravel/cast/concat chain fuses into a single dispatch per client
-        instead of one op per pytree leaf."""
+        instead of one op per pytree leaf.  ``device`` commits the inputs
+        (and therefore the buffers) to a specific device — the executables
+        are cached per sharding inside the one jit."""
         if self._flatten_jit is None:
             self._flatten_jit = jax.jit(self._flatten_impl)
-        return self._flatten_jit(payload)
+        return self._flatten_jit(self._commit(payload, device))
 
-    def flatten_batch(self, payload: Dict[str, Any]
-                      ) -> Dict[str, jnp.ndarray]:
+    def flatten_batch(self, payload: Dict[str, Any],
+                      device=None) -> Dict[str, jnp.ndarray]:
         """(B, n) group buffers from a payload with a leading client axis —
         the vmapped-client-engine analogue of ``flatten``: one fused
         dispatch flattens a whole block, and the result folds directly with
@@ -151,12 +171,16 @@ class FlatLayout:
         cannot drift apart."""
         if self._flatten_batch_jit is None:
             self._flatten_batch_jit = jax.jit(jax.vmap(self._flatten_impl))
-        return self._flatten_batch_jit(payload)
+        return self._flatten_batch_jit(self._commit(payload, device))
 
-    def zeros(self) -> Dict[str, jnp.ndarray]:
-        """Fresh fp32 accumulators, one per group (the O(s_a) partial)."""
-        return {g: jnp.zeros((n,), jnp.float32)
-                for g, n in self.group_sizes.items()}
+    def zeros(self, device=None) -> Dict[str, jnp.ndarray]:
+        """Fresh fp32 accumulators, one per group (the O(s_a) partial),
+        resident on ``device`` when given."""
+        out = {g: jnp.zeros((n,), jnp.float32)
+               for g, n in self.group_sizes.items()}
+        if device is not None:
+            out = {g: jax.device_put(b, device) for g, b in out.items()}
+        return out
 
     def entry_slice(self, name: str, buffers: Dict[str, jnp.ndarray]
                     ) -> jnp.ndarray:

@@ -39,9 +39,10 @@ import numpy as np
 
 from repro.comm.base import Communicator
 from repro.comm.local import LocalComm
-from repro.core.aggregation import flat_aggregate
+from repro.core.aggregation import flat_aggregate, global_aggregate
 from repro.core.algorithms import ClientData, FLAlgorithm
 from repro.core.executor import SequentialExecutor
+from repro.core.placement import DevicePlacement
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
 from repro.core.workload import WorkloadEstimator
 
@@ -80,11 +81,28 @@ class ParrotServer:
                  backup_fraction: float = 0.0,
                  round_engine: str = "bsp",
                  engine_opts: Optional[Dict[str, Any]] = None,
+                 placement: Optional[DevicePlacement] = None,
+                 gang_dispatch: bool = True,
                  seed: int = 0):
         from repro.core.engine import make_engine
         self.params = params
         self.algorithm = algorithm
         self.executors: Dict[int, SequentialExecutor] = {e.id: e for e in executors}
+        # device placement (DESIGN.md §8): an explicit placement pins the
+        # executors here; otherwise one is derived from executors that were
+        # constructed pre-pinned (``device=``).  None = the single default
+        # device, bit-for-bit the pre-multi-device behaviour.
+        if placement is not None:
+            placement.assign(executors)
+        else:
+            pins = {e.id: e.device for e in executors
+                    if getattr(e, "device", None) is not None}
+            if pins:
+                placement = DevicePlacement.from_pins(pins)
+        self.placement = placement
+        # SPMD gang dispatch of gangable BSP rounds (no-op without a
+        # multi-device placement; see engine.BSPEngine._dispatch)
+        self.gang_dispatch = bool(gang_dispatch)
         self.data_by_client = data_by_client
         self.clients_per_round = clients_per_round
         self.estimator = WorkloadEstimator(time_window=time_window)
@@ -166,6 +184,23 @@ class ParrotServer:
         tail = queue[-n:]
         schedule.assignment.setdefault(fast, []).extend(tail)
         return {slow: {t.client for t in tail}}, len(tail)
+
+    def global_fold(self, partials: List[Dict]) -> Dict[str, Any]:
+        """``GlobalAggregate`` routed through the device placement when one
+        is active: device-resident flat partials reduce with one sharded
+        psum per weight group (or colocating D2D left-folds — both
+        bit-identical to the host path), landing on the server device.  The
+        engines call this instead of ``global_aggregate`` directly."""
+        ops = self.algorithm.ops()
+        if self.placement is not None:
+            return self.placement.global_fold(partials, ops)
+        return global_aggregate(partials, ops)
+
+    def _drop_executor(self, k: int) -> None:
+        """Elastic K shrink: forget a dead executor (and its device pin)."""
+        self.executors.pop(k, None)
+        if self.placement is not None:
+            self.placement.release(k)
 
     def _maybe_compress(self, partial: Dict) -> Dict:
         if self.compressor is None:

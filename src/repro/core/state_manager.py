@@ -92,12 +92,19 @@ class ClientStateManager:
             return pickle.load(f)
 
     # ----------------------------------------------------------------- api
-    def save(self, client: int, state: Any) -> None:
-        """``Save_State`` in Algorithm 2."""
+    def save(self, client: int, state: Any, keep_device: bool = False) -> None:
+        """``Save_State`` in Algorithm 2.
+
+        ``keep_device=True`` stores the state's arrays as they are —
+        device-resident jax arrays from a pinned executor stay on the
+        device (no blocking host copy on the dispatch path); they are
+        materialised to host numpy only if/when the LRU spills or a
+        checkpoint flushes them."""
         assert owner_host(client, self.n_hosts) == self.host or self.n_hosts == 1, \
             f"client {client} not owned by host {self.host}"
         with self._lock:
-            state = jax.tree.map(np.asarray, state)
+            if not keep_device:
+                state = jax.tree.map(np.asarray, state)
             if client in self._mem:
                 self._mem_bytes -= _tree_bytes(self._mem.pop(client))
             self._mem[client] = state
@@ -126,21 +133,29 @@ class ClientStateManager:
                 return tree
             return default
 
-    def save_many(self, states: Dict[int, Any]) -> None:
+    def save_many(self, states: Dict[int, Any],
+                  keep_device: bool = False) -> None:
         """Batched ``Save_State`` for a block of B clients (one lock trip —
         the compiled-engine executor writes a whole vmapped block back in
         one call; the RLock makes the nested per-client saves free)."""
         with self._lock:
             for client, state in states.items():
-                self.save(client, state)
+                self.save(client, state, keep_device=keep_device)
 
-    def load_many(self, clients: Iterable[int],
-                  default: Any = None) -> List[Any]:
+    def load_many(self, clients: Iterable[int], default: Any = None,
+                  device: Any = None) -> List[Any]:
         """Batched ``Load_State``: one state per client, in order, under a
         single lock acquisition (the executor stacks the results for the
-        vmapped scan)."""
+        vmapped scan).  ``device`` places each loaded state onto the
+        requesting executor's device (host→device for spilled numpy states,
+        a direct D2D copy for states another executor left resident
+        elsewhere, and a no-op for states already home)."""
         with self._lock:
-            return [self.load(client, default) for client in clients]
+            out = [self.load(client, default) for client in clients]
+        if device is not None:
+            out = [s if s is None else jax.device_put(s, device)
+                   for s in out]
+        return out
 
     def __contains__(self, client: int) -> bool:
         return client in self._mem or client in self._on_disk

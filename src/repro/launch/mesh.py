@@ -30,8 +30,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(n_devices: int | None = None, model_axis: int = 1):
-    """A small mesh over whatever devices exist (tests / examples)."""
+def make_host_mesh(n_devices: int | None = None, model_axis: int = 1,
+                   devices=None):
+    """A small mesh over whatever devices exist (tests / examples).
+
+    ``devices`` pins an explicit device list *in that order* — the device-
+    placement layer (``core/placement.py``) builds its cross-device
+    reduction mesh this way so mesh order matches executor pin order (the
+    rank-ordered psum must fold partials in executor order to stay
+    bit-identical to the host left-fold).
+    """
+    if devices is not None:
+        import numpy as np
+        from jax.sharding import Mesh
+        n = len(devices)
+        assert n % model_axis == 0
+        return Mesh(np.array(devices).reshape(n // model_axis, model_axis),
+                    ("data", "model"))
     n = n_devices or len(jax.devices())
     assert n % model_axis == 0
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -29,6 +29,18 @@ def dp_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def stacked_partial_spec(mesh, ndim: int = 2,
+                         axes: Optional[Sequence[str]] = None) -> P:
+    """PartitionSpec for per-executor flat partials stacked on axis 0 —
+    rows over the data-parallel axes (or an explicit ``axes`` subset, e.g.
+    a single-axis reduction on a multi-pod mesh), buffer payload unsharded.
+    Shared by the placement layer's psum fold (one (1, n) shard per device)
+    and the SPMD collective aggregate, so the two reductions cannot drift
+    onto different layouts."""
+    row = tuple(axes) if axes is not None else dp_axes(mesh)
+    return P(row, *([None] * (ndim - 1)))
+
+
 def axis_size(mesh, axes) -> int:
     n = 1
     for a in ([axes] if isinstance(axes, str) else axes):
