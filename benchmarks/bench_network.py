@@ -1,0 +1,81 @@
+"""Network-simulation benchmark (DESIGN.md §9): simulated makespan over a
+{uniform, lognormal} bandwidth population × {none, topk, int8} compressor
+grid, plus a diurnal-availability cell.
+
+What it demonstrates (ISSUE 5 acceptance): with comm priced on the virtual
+clock, the compressors finally move the simulated makespan — under a
+constrained uplink top-k must reduce makespan vs uncompressed at equal
+rounds — and a lognormal (heavy-tailed, FedScale-like) population is
+slower than a uniform one of the same median because the barrier waits on
+the bottleneck link.
+
+``BENCH_NETWORK_ROUNDS`` overrides the round count (CI smoke runs few).
+"""
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import ClientAvailability, NetworkModel
+from repro.core.compression import make_compressor
+from repro.data import synthesize_capacity_trace
+
+ROUNDS = int(os.environ.get("BENCH_NETWORK_ROUNDS", "10"))
+SKIP = max(1, ROUNDS // 5)
+N_CLIENTS = 120
+CLIENTS_PER_ROUND = 32
+K = 4
+MEDIAN_KBPS = 40.0          # constrained last-mile uplink: comm-bound rounds
+
+COMPRESSORS = [("none", lambda: None),
+               ("topk", lambda: make_compressor("topk", 0.05)),
+               ("int8", lambda: make_compressor("int8"))]
+
+
+def _net(dist: str) -> NetworkModel:
+    return NetworkModel.from_trace(synthesize_capacity_trace(
+        N_CLIENTS, seed=13, dist=dist, median_uplink_kbps=MEDIAN_KBPS))
+
+
+def _run(dist: str, comp_name: str, make_comp, availability=None):
+    srv = common.build_server(
+        n_clients=N_CLIENTS, clients_per_round=CLIENTS_PER_ROUND, K=K,
+        scheduler="parrot", warmup_rounds=2, network=_net(dist),
+        availability=availability, compressor=make_comp())
+    hist = [srv.run_round() for _ in range(ROUNDS)]
+    return {
+        "makespan_s": float(np.mean([m.makespan for m in hist][SKIP:])),
+        "comm_up_s": float(np.mean(
+            [m.extra.get("comm_time_up", 0.0) for m in hist][SKIP:])),
+        "wire_kb": float(np.mean(
+            [m.extra.get("comm_wire_bytes", 0.0) for m in hist][SKIP:])
+            / 1024.0),
+        "dropped": float(np.sum(
+            [m.extra.get("dropped_clients", 0.0) for m in hist])),
+    }
+
+
+def run() -> None:
+    results = {}
+    for dist in ("uniform", "lognormal"):
+        for name, make_comp in COMPRESSORS:
+            r = _run(dist, name, make_comp)
+            results[(dist, name)] = r
+            common.emit(f"network/{dist}/{name}/makespan",
+                        r["makespan_s"] * 1e6,
+                        f"comm_up_s={r['comm_up_s']:.3f} "
+                        f"wire_kb={r['wire_kb']:.1f}")
+    for dist in ("uniform", "lognormal"):
+        base = results[(dist, "none")]["makespan_s"]
+        for name in ("topk", "int8"):
+            red = 100.0 * (1.0 - results[(dist, name)]["makespan_s"]
+                           / max(base, 1e-12))
+            common.emit(f"network/{dist}/{name}/vs_none", red,
+                        f"makespan_reduction_pct={red:.1f}")
+    # diurnal churn on top of the lognormal population: selection filtering
+    # + dropout + idle fast-forward all exercised end-to-end
+    av = ClientAvailability.diurnal(N_CLIENTS, period_s=200.0,
+                                    duty_mean=0.6, seed=17)
+    r = _run("lognormal", "none", lambda: None, availability=av)
+    common.emit("network/lognormal/diurnal/makespan", r["makespan_s"] * 1e6,
+                f"dropped_total={r['dropped']:.0f}")

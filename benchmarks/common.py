@@ -69,7 +69,8 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                  speed_model: SpeedModel = homogeneous, partition="natural",
                  partition_arg=5.0, compressor=None, seed=0, local_epochs=1,
                  warmup_rounds=1, round_engine="bsp",
-                 engine_opts=None) -> ParrotServer:
+                 engine_opts=None, network=None,
+                 availability=None) -> ParrotServer:
     data = make_classification_clients(
         n_clients, dim=32, n_classes=10, partition=partition,
         partition_arg=partition_arg, mean_samples=60, batch_size=20,
@@ -84,6 +85,7 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                         scheduler_policy=scheduler, time_window=time_window,
                         warmup_rounds=warmup_rounds, compressor=compressor,
                         round_engine=round_engine, engine_opts=engine_opts,
+                        network=network, availability=availability,
                         seed=seed)
 
 

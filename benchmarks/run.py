@@ -21,6 +21,9 @@ Mapping to the paper:
                       jit-scan+vmap client-steps/sec at B in {1,4,16}
   bench_round_modes — event-driven round engines: bsp vs semi-sync vs async
                       makespan / wall / loss under dynamic heterogeneity
+  bench_network     — trace-driven network simulation: makespan over
+                      {uniform, lognormal} bandwidth x {none, topk, int8}
+                      compressor grid + diurnal availability
   bench_device_scaling — device-parallel executors: steps/s at 1/2/4 virtual
                       devices (subprocess cells) + params bit-parity
   bench_kernels     — Pallas wrapper micro-timings (plumbing check)
@@ -39,7 +42,7 @@ sys.path.insert(0, _ROOT)
 MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
         "bench_memory", "bench_comm", "bench_algorithms",
         "bench_aggregation", "bench_client_training", "bench_round_modes",
-        "bench_device_scaling", "bench_kernels", "roofline"]
+        "bench_network", "bench_device_scaling", "bench_kernels", "roofline"]
 
 
 def main(argv=None) -> None:

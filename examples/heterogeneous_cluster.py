@@ -3,8 +3,11 @@
 Simulates the Appendix-A protocol: fixed slowdown ratios (Hete. GPU) and
 cosine-drift instability (Dyn. GPU), then compares round makespans under
   (a) no scheduling, (b) Parrot all-history, (c) Parrot Time-Window,
-and finally the round-engine modes (DESIGN.md §3): BSP scheduling can only
-work *around* stragglers; semi-sync and async hide them.
+then the round-engine modes (DESIGN.md §3): BSP scheduling can only
+work *around* stragglers; semi-sync and async hide them.  The final
+section prices communication from a FedScale-style bandwidth trace
+(DESIGN.md §9): a constrained lognormal uplink population makes the rounds
+comm-bound, and top-k delta compression buys most of the makespan back.
 
   PYTHONPATH=src python examples/heterogeneous_cluster.py
 """
@@ -36,7 +39,7 @@ ROUNDS = 10
 
 
 def run(name, policy, speed, window=0, engine="bsp", engine_opts=None,
-        clients_per_round=40):
+        clients_per_round=40, network=None, compressor=None):
     params = {"w": jnp.zeros((32, 10)), "b": jnp.zeros((10,))}
     data = make_classification_clients(200, dim=32, n_classes=10,
                                        partition="quantity_skew",
@@ -49,7 +52,8 @@ def run(name, policy, speed, window=0, engine="bsp", engine_opts=None,
                        data_by_client=data,
                        clients_per_round=clients_per_round,
                        scheduler_policy=policy, time_window=window,
-                       round_engine=engine, engine_opts=engine_opts, seed=0)
+                       round_engine=engine, engine_opts=engine_opts,
+                       network=network, compressor=compressor, seed=0)
     ms = [srv.run_round().makespan for _ in range(ROUNDS)]
     err = [h.estimation_error for h in srv.history
            if np.isfinite(h.estimation_error)]
@@ -79,3 +83,17 @@ d = run("async (lambda=0.5)", "parrot", dyn, engine="async",
         clients_per_round=96,
         engine_opts={"staleness_lambda": 0.5, "chunk_size": 8})
 print(f"async hides the straggler tail: {c / d:.2f}x shorter rounds")
+
+print("\n== Bandwidth trace (lognormal uplinks, median 40 kbps) ==")
+from repro.core import NetworkModel                       # noqa: E402
+from repro.core.compression import make_compressor        # noqa: E402
+from repro.data import synthesize_capacity_trace          # noqa: E402
+
+net = NetworkModel.from_trace(synthesize_capacity_trace(
+    200, seed=7, dist="lognormal", median_uplink_kbps=40.0))
+e = run("comm-free (no network)", "parrot", hete)
+f = run("constrained uplink", "parrot", hete, network=net)
+g = run("constrained + topk(5%)", "parrot", hete, network=net,
+        compressor=make_compressor("topk", 0.05))
+print(f"comm turns makespan {f / max(e, 1e-12):.0f}x worse; "
+      f"topk wins {f / max(g, 1e-12):.2f}x of it back")

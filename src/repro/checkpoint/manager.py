@@ -53,6 +53,10 @@ class CheckpointManager:
                 "rng_state": server.rng.bit_generator.state,
                 "estimator_records": {
                     k: list(v) for k, v in server.estimator._records.items()},
+                # the *fitted* models too: the async engine consults
+                # last_fit between schedules (steal victims, dropout
+                # predictions) — a resume that refits lazily would diverge
+                "estimator_fit": dict(server.estimator.last_fit),
                 "history": server.history,
                 "executor_ids": sorted(server.executors),
                 # engine in-flight state (async pipeline / semi-sync carry):
@@ -60,6 +64,13 @@ class CheckpointManager:
                 # restore resumes the discrete-event pipeline exactly where
                 # the save left it (None for the stateless BSP engine)
                 "engine": server.engine.state_dict(),
+                # network-simulation anchors (DESIGN.md §9): cumulative
+                # virtual time (availability windows), last broadcast size
+                # and achieved wire ratio (comm predictions/pricing) — a
+                # resumed run must price comm exactly as the original would
+                "virtual_now": server.virtual_now,
+                "last_payload_nbytes": server._last_payload_nbytes,
+                "wire_ratio": server._wire_ratio,
                 "time": time.time(),
             }
             with open(os.path.join(tmp, "server.pkl"), "wb") as f:
@@ -106,8 +117,12 @@ class CheckpointManager:
         server.estimator._records.clear()
         for k, v in blob["estimator_records"].items():
             server.estimator._records[int(k)] = list(v)
+        server.estimator.last_fit = dict(blob.get("estimator_fit", {}))
         server.history = list(blob["history"])
         server.round = blob["round"]
+        server.virtual_now = float(blob.get("virtual_now", 0.0))
+        server._last_payload_nbytes = int(blob.get("last_payload_nbytes", 0))
+        server._wire_ratio = float(blob.get("wire_ratio", 1.0))
         server.engine.load_state_dict(blob.get("engine"))
         state_dir = os.path.join(step_dir, "state")
         if os.path.isdir(state_dir):

@@ -21,16 +21,13 @@ from repro.comm.base import Communicator
 
 
 def _nbytes(payload: Any) -> int:
-    # lazy import: repro.core.round imports this module (cycle otherwise)
-    from repro.core.aggregation import payload_bytes
+    # lazy import: repro.core.round imports this module (cycle otherwise).
+    # wire_bytes counts a compressed partial at its achieved wire size (the
+    # sums' compressed segments + the uncompressed rest) — the same sizing
+    # the network model prices uploads at (core/network.py).
+    from repro.core.aggregation import wire_bytes
     try:
-        if isinstance(payload, dict) and "_wire_bytes" in payload:
-            # compressed partial: count the achieved wire size of the sums
-            # (flat group buffers or nested leaves) + the uncompressed rest
-            rest = {k: v for k, v in payload.items()
-                    if k not in ("sums", "_wire_bytes")}
-            return int(payload["_wire_bytes"]) + payload_bytes(rest)
-        return payload_bytes(payload)
+        return wire_bytes(payload)
     except Exception:
         return 0
 

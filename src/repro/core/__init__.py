@@ -12,6 +12,8 @@
   engine.py / clock.py       — event-driven round engines (BSP / semi-sync /
                                async bounded-staleness) on a shared
                                virtual-time event queue
+  network.py                 — trace-driven network & availability
+                               simulation (comm-aware virtual clock, §9)
   compression.py             — delta compression (top-k EF / int8)
 """
 from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
@@ -24,6 +26,8 @@ from repro.core.clock import TickTimer, VirtualClock
 from repro.core.engine import (AsyncEngine, BSPEngine, RoundEngine,
                                SemiSyncEngine, make_engine)
 from repro.core.executor import SequentialExecutor
+from repro.core.network import (ClientAvailability, CommEvent, LinkProfile,
+                                NetworkModel)
 from repro.core.placement import DevicePlacement
 from repro.core.round import ParrotServer, RoundMetrics, run_flat_reference
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
@@ -31,10 +35,13 @@ from repro.core.state_manager import ClientStateManager, owner_host
 from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
 
 __all__ = [
-    "ALGORITHMS", "AsyncEngine", "BSPEngine", "ClientData", "ClientResult",
-    "ClientStateManager", "ClientStepEngine", "ClientTask", "DevicePlacement",
+    "ALGORITHMS", "AsyncEngine", "BSPEngine", "ClientAvailability",
+    "ClientData", "ClientResult",
+    "ClientStateManager", "ClientStepEngine", "ClientTask", "CommEvent",
+    "DevicePlacement",
     "FLAlgorithm",
-    "FlatLayout", "LocalAggregator", "Op", "ParrotScheduler",
+    "FlatLayout", "LinkProfile", "LocalAggregator", "NetworkModel", "Op",
+    "ParrotScheduler",
     "ParrotServer", "RoundEngine", "RoundMetrics", "RunRecord", "Schedule",
     "SemiSyncEngine", "SequentialExecutor", "TickTimer", "VirtualClock",
     "WorkloadEstimator", "WorkloadModel",

@@ -435,3 +435,16 @@ def payload_bytes(tree: Any) -> int:
         elif isinstance(a, (int, float, bool)):
             total += 8
     return total
+
+
+def wire_bytes(payload: Any) -> int:
+    """Achieved wire size of a payload: a compressed partial (compressors
+    stamp ``_wire_bytes`` on the sums they shrank) counts its compressed
+    sums plus the uncompressed rest; everything else is ``payload_bytes``.
+    This is the size the comm layer accounts AND the size the network model
+    prices uploads at (``core/network.py``) — one definition for both."""
+    if isinstance(payload, dict) and "_wire_bytes" in payload:
+        rest = {k: v for k, v in payload.items()
+                if k not in ("sums", "_wire_bytes")}
+        return int(payload["_wire_bytes"]) + payload_bytes(rest)
+    return payload_bytes(payload)

@@ -23,6 +23,13 @@ discrete-event queue:
   version, queue contents) that a causally-correct parallel execution would
   have shown it.
 
+The queue is not compute-only: under a network model
+(``core/network.py``, DESIGN.md §9) the engines also push comm arrivals —
+``"chunk_arrived"`` events carrying a :class:`~repro.core.network.CommEvent`
+at ``compute_done + latency + wire_bytes/uplink`` — so uploads interleave
+with chunk completions on the same deterministic (time, seq) order, and
+``"wake"`` events that fast-forward an availability gap.
+
 Timers: executors take an injectable ``timer`` (default
 ``time.perf_counter``).  :class:`TickTimer` advances a fixed amount per
 call, which makes measured durations a pure function of the *call sequence*

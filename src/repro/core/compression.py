@@ -23,7 +23,7 @@ both report the achieved wire size so the comm benchmarks can account them.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +61,7 @@ class PartialCompressor:
         raise NotImplementedError
 
     # --- flat path --------------------------------------------------------
-    def _compress_flat(self, sums: Dict, layout) -> Dict:
+    def _compress_flat(self, sums: Dict, layout, prefix: str = "") -> Dict:
         buffers = dict(sums["buffers"])
         if layout is None:
             return flat_sums(buffers)
@@ -83,7 +83,7 @@ class PartialCompressor:
                     segments.append(("raw", arr[cursor:off]))
                 segments.append(
                     ("comp", self._compress(arr[off:off + size],
-                                            f"{g}/{name}")))
+                                            f"{prefix}{g}/{name}")))
                 cursor = off + size
             if cursor < arr.size:
                 segments.append(("raw", arr[cursor:]))
@@ -105,13 +105,13 @@ class PartialCompressor:
         return flat_sums(buffers)
 
     # --- legacy nested path ----------------------------------------------
-    def _compress_nested(self, sums: Dict) -> Dict:
+    def _compress_nested(self, sums: Dict, prefix: str = "") -> Dict:
         out = dict(sums)
         for name in self.entries:
             if name not in out:
                 continue
             leaves, treedef = jax.tree.flatten(out[name])
-            comp = [self._compress(np.asarray(l), f"{name}/{i}")
+            comp = [self._compress(np.asarray(l), f"{prefix}{name}/{i}")
                     for i, l in enumerate(leaves)]
             out[name] = {"__compressed__": True, "treedef": treedef,
                          "leaves": comp}
@@ -127,11 +127,22 @@ class PartialCompressor:
         return out
 
     # --- public API -------------------------------------------------------
-    def compress_partial(self, partial: Dict) -> Dict:
+    def compress_partial(self, partial: Dict,
+                         key: Optional[str] = None) -> Dict:
+        """``key`` namespaces stateful compressor state (the top-k error-
+        feedback residuals): the server passes the sending executor's id,
+        so each executor carries its OWN residual stream — residuals are
+        only meaningful per sender, and per-executor streams make the
+        compressed values independent of the cross-executor compression
+        order (the network path compresses at dispatch time, the comm-free
+        path at fold time; per-executor state makes both identical)."""
         out = dict(partial)
         sums = partial["sums"]
-        out["sums"] = (self._compress_flat(sums, partial.get("layout"))
-                       if is_flat_sums(sums) else self._compress_nested(sums))
+        prefix = "" if key is None else f"{key}/"
+        out["sums"] = (self._compress_flat(sums, partial.get("layout"),
+                                           prefix)
+                       if is_flat_sums(sums)
+                       else self._compress_nested(sums, prefix))
         out["_wire_bytes"] = _wire_bytes(out["sums"])
         return out
 
@@ -175,22 +186,47 @@ class TopKCompressor(PartialCompressor):
     _decompress = _decompress_array
 
 
+@jax.jit
+def _int8_quantize(f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(f)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(f / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+@jax.jit
+def _int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
 class Int8Compressor(PartialCompressor):
-    """Symmetric per-tensor int8 quantisation with fp32 scale."""
+    """Symmetric per-tensor int8 quantisation with fp32 scale.
+
+    Quantize and dequantize are one jitted call per flat segment (compiled
+    once per segment shape, cached by jax) — the abs-max reduce, scale,
+    round and cast fuse into a single executable instead of the eager numpy
+    round-trip's four passes.  The first step toward the ROADMAP "compiled
+    compression" item; ``TopKCompressor`` stays eager (its error-feedback
+    residual state is host-side by design).
+    """
 
     def __init__(self, entries: tuple = ("delta",)):
         self.entries = entries
 
     def _compress_array(self, a: np.ndarray) -> CompressedTensor:
-        f = np.asarray(a, np.float32)
-        scale = float(np.max(np.abs(f))) / 127.0 if f.size else 1.0
-        scale = max(scale, 1e-12)
-        q = np.clip(np.round(f / scale), -127, 127).astype(np.int8)
-        return CompressedTensor("int8", tuple(a.shape), str(a.dtype),
-                                {"q": q, "scale": np.float32(scale)})
+        if np.size(a) == 0:
+            return CompressedTensor("int8", tuple(np.shape(a)),
+                                    str(np.asarray(a).dtype),
+                                    {"q": np.zeros(np.shape(a), np.int8),
+                                     "scale": np.float32(1.0)})
+        q, scale = _int8_quantize(jnp.asarray(a, jnp.float32))
+        return CompressedTensor("int8", tuple(np.shape(a)),
+                                str(getattr(a, "dtype", q.dtype)),
+                                {"q": q, "scale": scale})
 
     def _decompress_array(self, c: CompressedTensor) -> np.ndarray:
-        return c.data["q"].astype(np.float32) * c.data["scale"]
+        if np.size(c.data["q"]) == 0:
+            return np.zeros(c.shape, np.float32)
+        return _int8_dequantize(c.data["q"], c.data["scale"])
 
     def _compress(self, a: np.ndarray, key: str) -> CompressedTensor:
         return self._compress_array(a)
@@ -213,7 +249,11 @@ def _wire_bytes(sums: Dict) -> int:
         if isinstance(v, dict) and v.get("__compressed__"):
             tot += sum(c.nbytes for c in v["leaves"])
         else:
-            tot += sum(int(np.prod(np.shape(l))) * 4
+            # uncompressed leaves ship at their REAL itemsize: a flat 4
+            # over-billed bf16/fp16 payloads 2x (python scalars keep the
+            # historical 4-byte accounting)
+            tot += sum(int(np.prod(np.shape(l)))
+                       * np.dtype(getattr(l, "dtype", np.float32)).itemsize
                        for l in jax.tree.leaves(v))
     return tot
 

@@ -34,25 +34,50 @@ simulation: chunks execute lazily at their virtual dispatch time (every
 earlier event has already been processed, so each chunk sees the params
 version and queue state a causally-correct parallel run would show it), and
 event order is a pure function of the per-chunk virtual durations.
+
+With a :class:`~repro.core.network.NetworkModel` / ``ClientAvailability``
+on the server (DESIGN.md §9) the same event queue also carries comm: a
+chunk is busy for ``download + compute``, its upload ships as a
+``chunk_arrived`` :class:`~repro.core.network.CommEvent` priced
+``latency + wire_bytes/uplink`` at the partial's *achieved* (compressed)
+size, and folds only when that event pops — uploads overlap the next
+chunk, semi-sync deadlines and async staleness include comm delay, and
+offline clients drop through each engine's existing re-run path.  Both
+default to None, which keeps every code path below bit-exact with the
+comm-free engines.
 """
 from __future__ import annotations
 
 import concurrent.futures as cf
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.aggregation import (merge_partials, scale_partial,
-                                    staleness_weight)
+                                    staleness_weight, wire_bytes)
 from repro.core.clock import VirtualClock
 from repro.core.executor import ExecutorFailure, ExecutorReport
+from repro.core.network import CommEvent
 from repro.core.scheduler import (ClientTask, Schedule, pick_steal_victim,
                                   predict_remaining, predict_span)
 from repro.core.workload import RunRecord
+
+
+def _ship_partial(srv, executor: int, compressed: Dict) -> Dict:
+    """One partial across the comm layer: send -> poll (-> blocking recv on
+    transports without immediate local delivery) -> decompress.  The copy
+    that reaches aggregation is the one that crossed the wire, keeping
+    error-feedback residuals in sync — the single definition both the
+    comm-free fold path and the network pricer go through."""
+    srv.comm.executor_send(executor, compressed, tag="partial")
+    wire = srv.comm.poll(executor, tag="partial")
+    if wire is None:
+        wire = srv.comm.recv_from_executor(executor, tag="partial")
+    return srv._maybe_decompress(wire)
 
 
 def _host_tree(tree):
@@ -86,6 +111,129 @@ class _ExecState:
     dead: bool = False        # failure event pushed but not yet processed
 
 
+class _NetSim:
+    """Per-round comm/availability pricing (DESIGN.md §9).
+
+    Created only when the server carries a :class:`NetworkModel` or a
+    :class:`ClientAvailability` — the engines keep their pre-network code
+    paths bit-exactly otherwise.  ``t0`` anchors this round's local event
+    times on the server's cumulative virtual axis (``srv.virtual_now``);
+    the async engine's clock is already cumulative, so it anchors at 0.
+    """
+
+    def __init__(self, srv, t0: float):
+        self.srv = srv
+        self.net = srv.network
+        self.avail = srv.availability
+        self.t0 = t0
+        self.payload_nbytes = srv._last_payload_nbytes
+        self.time_up = 0.0
+        self.time_down = 0.0
+        self.bytes_up = 0
+        self.dropped = 0
+
+    def set_payload(self, payload: Dict) -> None:
+        """Size the round's broadcast (what downloads are priced at)."""
+        from repro.core.aggregation import payload_bytes
+        self.payload_nbytes = payload_bytes(payload)
+        self.srv._last_payload_nbytes = self.payload_nbytes
+
+    # -- pricing -----------------------------------------------------------
+    def down(self, clients) -> float:
+        """Price one model download to a chunk's clients (accounted)."""
+        if self.net is None:
+            return 0.0
+        t = self.net.download_time(clients, self.payload_nbytes)
+        self.time_down += t
+        return t
+
+    def up(self, clients, nbytes: int) -> float:
+        """Price one partial upload at its achieved wire size (accounted)."""
+        if self.net is None:
+            return 0.0
+        t = self.net.upload_time(clients, nbytes)
+        self.time_up += t
+        self.bytes_up += int(nbytes)
+        return t
+
+    def comm_pred(self, clients) -> float:
+        """Predicted chunk comm span: broadcast down + upload estimated at
+        the compressor's last achieved wire ratio."""
+        if self.net is None:
+            return 0.0
+        return self.net.chunk_comm_time(
+            clients, self.payload_nbytes,
+            int(self.payload_nbytes * self.srv._wire_ratio))
+
+    def ship(self, executor: int, partial: Dict) -> Tuple[Dict, int]:
+        """Compress, measure the achieved wire size (what the upload is
+        priced at), update the server's compression ratio for future
+        predictions, then cross the wire via ``_ship_partial``."""
+        srv = self.srv
+        comp = srv._maybe_compress(partial, executor)
+        nb = wire_bytes(comp)
+        raw = wire_bytes(partial)
+        if raw > 0:
+            srv._wire_ratio = nb / raw
+        return _ship_partial(srv, executor, comp), nb
+
+    def push_chunk(self, clock: VirtualClock, rep: ExecutorReport,
+                   start: float, done_data, record, version: int) -> float:
+        """Push one completed chunk's comm-priced event pair: ``chunk_done``
+        at download+compute (the executor frees; ``done_data`` is the
+        engine's handler payload) and — when the chunk did work — a
+        ``chunk_arrived`` :class:`CommEvent` at +upload carrying the wire
+        partial.  The single definition both DES engines dispatch through.
+        Returns the compute-done time (the executor's ``busy_until``)."""
+        t_c = start + self.down(rep.completed_clients) + rep.virtual_time
+        clock.push(t_c, "chunk_done", done_data)
+        if rep.n_tasks:
+            wirep, nb = self.ship(rep.executor, rep.partial)
+            rep.wire_bytes = nb
+            t_arr = t_c + self.up(rep.completed_clients, nb)
+            clock.push(t_arr, "chunk_arrived", CommEvent(
+                executor=rep.executor, partial=wirep, record=record,
+                n_tasks=rep.n_tasks,
+                completed_clients=tuple(rep.completed_clients),
+                wire_bytes=nb, version=version))
+        return t_c
+
+    # -- availability ------------------------------------------------------
+    def split_available(self, tasks: List[ClientTask], start_local: float,
+                        pred_dur: float
+                        ) -> Tuple[List[ClientTask], List[ClientTask]]:
+        """(runnable, dropped) at absolute time ``t0 + start_local``: a
+        task drops when its client is offline now, or its remaining window
+        is predicted too short for the chunk (mid-chunk expiry)."""
+        if self.avail is None:
+            return list(tasks), []
+        t = self.t0 + start_local
+        kept, dropped = [], []
+        for task in tasks:
+            if (self.avail.available(task.client, t)
+                    and self.avail.remaining(task.client, t) >= pred_dur):
+                kept.append(task)
+            else:
+                dropped.append(task)
+        self.dropped += len(dropped)
+        return kept, dropped
+
+    def extra(self) -> Dict[str, float]:
+        """Per-round comm-time/bytes + dropout metrics."""
+        return {"comm_time_up": self.time_up,
+                "comm_time_down": self.time_down,
+                "comm_wire_bytes": float(self.bytes_up),
+                "dropped_clients": float(self.dropped)}
+
+    def reset_counters(self) -> None:
+        """Start a new accounting window (the async engine keeps ONE pricer
+        across rounds: chunks dispatched in a round's tail — after its
+        metrics were read — bill the next window instead of vanishing)."""
+        self.time_up = self.time_down = 0.0
+        self.bytes_up = 0
+        self.dropped = 0
+
+
 class RoundEngine:
     """One synchronization mode.  Engines may keep state across rounds (the
     async engine does); a server owns exactly one engine instance.
@@ -107,6 +255,43 @@ class RoundEngine:
             raise ValueError(f"engine {self.mode!r} cannot restore state")
 
     # -- shared plumbing ---------------------------------------------------
+    def _netsim(self, srv, t0: float) -> Optional[_NetSim]:
+        """The round's comm/availability pricer, or None for the (default)
+        comm-transparent configuration — in which case every engine takes
+        its pre-network code path bit-exactly."""
+        if srv.network is None and srv.availability is None:
+            return None
+        return _NetSim(srv, t0)
+
+    def _fast_forward_empty(self, srv, reselect):
+        """Nobody is selectable right now (availability gap): advance the
+        server's virtual clock to the next time any client comes online and
+        re-select.  Returns (tasks, idle_seconds)."""
+        t_next = srv._next_available_time()
+        if not math.isfinite(t_next):
+            raise RuntimeError("availability trace leaves no client ever "
+                               "available again")
+        if t_next <= srv.virtual_now:
+            return [], 0.0
+        idle = t_next - srv.virtual_now
+        srv.virtual_now = t_next
+        return reselect(), idle
+
+    def _advance_past_gap(self, srv) -> float:
+        """Zero-progress round (every task dropped — offline, or online but
+        predicted to expire mid-chunk): advance the server's virtual clock
+        past the next availability boundary (window start for offline
+        clients, window *end* for online ones) or the next round would
+        repeat verbatim.  Returns the idle seconds added (0 if no jump)."""
+        t_next = srv._next_available_time()
+        if not (math.isfinite(t_next) and t_next > srv.virtual_now):
+            t_next = srv._next_availability_change()
+        if math.isfinite(t_next) and t_next > srv.virtual_now:
+            idle = t_next - srv.virtual_now
+            srv.virtual_now = t_next
+            return idle
+        return 0.0
+
     def _chunk_size(self, srv, override: Optional[int]) -> int:
         if override:
             return max(1, int(override))
@@ -114,14 +299,9 @@ class RoundEngine:
 
     def _wire(self, srv, executor: int, partial: Dict) -> Dict:
         """Ship one partial through the comm layer (compress → send → poll →
-        decompress): the copy that reaches aggregation is the one that
-        crossed the wire, keeping error-feedback residuals in sync."""
-        srv.comm.executor_send(executor, srv._maybe_compress(partial),
-                               tag="partial")
-        wire = srv.comm.poll(executor, tag="partial")
-        if wire is None:      # transport without immediate local delivery
-            wire = srv.comm.recv_from_executor(executor, tag="partial")
-        return srv._maybe_decompress(wire)
+        decompress); see ``_ship_partial``."""
+        return _ship_partial(srv, executor,
+                             srv._maybe_compress(partial, executor))
 
     def _chunk_record(self, srv, rnd: int, rep: ExecutorReport
                       ) -> Optional[RunRecord]:
@@ -175,6 +355,17 @@ class BSPEngine(RoundEngine):
     for the serial path, completion order for ``parallel_dispatch`` — which
     reproduces the legacy partial/fold order exactly (float summation is not
     associative; order is part of bit-exactness).
+
+    With a network model the barrier waits on comm too: executor k's round
+    span becomes ``download(queue) + Σ compute + upload(partial)``, the
+    download priced at the broadcast's size over the queue's bottleneck
+    downlink and the upload at the partial's *achieved* wire size over the
+    bottleneck uplink — the fold order (and therefore the params) stays
+    identical to the comm-free path; only the makespan moves.  With an
+    availability model, offline clients are filtered at selection and
+    clients predicted to leave before their queue position completes are
+    dropped at dispatch (their round contribution is lost, as on a real
+    deployment).
     """
 
     mode = "bsp"
@@ -187,6 +378,14 @@ class BSPEngine(RoundEngine):
             tasks, srv._next_tasks = srv._next_tasks, None
         else:
             tasks = srv.select_clients()
+        netsim = self._netsim(srv, srv.virtual_now)
+        idle = 0.0
+        if not tasks and netsim is not None:
+            tasks, idle = self._fast_forward_empty(srv, srv.select_clients)
+            netsim.t0 = srv.virtual_now
+            # an overlapped schedule prepared for the pre-jump EMPTY cohort
+            # is stale — the reselected clients must be scheduled fresh
+            srv._pending_schedule = None
 
         # compute-comm overlap: the schedule for this round may have been
         # prepared while the previous round's global reduce was in flight.
@@ -199,13 +398,36 @@ class BSPEngine(RoundEngine):
             remapped = schedule.remap(list(srv.executors))
         else:
             schedule, overlapped = srv.scheduler.schedule(
-                rnd, tasks, list(srv.executors)), False
+                rnd, tasks, list(srv.executors),
+                comm_cost=srv._sched_comm_cost()), False
 
         payload = srv.algorithm.broadcast_payload(srv.params,
                                                   srv.server_state)
+        if netsim is not None:
+            netsim.set_payload(payload)
         skip_map, n_backups = srv._plan_backups(schedule)
+        dropped: Set[int] = set()
+        if netsim is not None and netsim.avail is not None:
+            drop_map, dropped = self._plan_drops(srv, schedule, netsim)
+            for k, s in drop_map.items():
+                skip_map.setdefault(k, set()).update(s)
         reports, n_failed = self._dispatch(srv, rnd, schedule, payload,
-                                           skip_map)
+                                           skip_map, netsim, dropped)
+
+        # round span — computed before the overlap selection below, which
+        # must see the server's virtual clock at this round's END (or the
+        # next cohort's availability would be filtered at its start)
+        if netsim is None:
+            makespan = max((r.virtual_time for r in reports), default=0.0)
+        else:
+            # the barrier waits on comm events: each executor's span is
+            # broadcast-download + compute + partial-upload (the upload at
+            # the achieved wire size measured when the partial shipped)
+            makespan = max(
+                (netsim.down(r.completed_clients) + r.virtual_time
+                 + netsim.up(r.completed_clients, r.wire_bytes)
+                 for r in reports), default=0.0)
+        srv.virtual_now += makespan
 
         # overlap: prepare round r+1's schedule "while the reduce is in
         # flight" (before the global_aggregate below consumes the partials)
@@ -214,7 +436,8 @@ class BSPEngine(RoundEngine):
                 [rec for r in reports for rec in r.records])
             srv._next_tasks = srv.select_clients()
             srv._pending_schedule = srv.scheduler.schedule(
-                rnd + 1, srv._next_tasks, list(srv.executors))
+                rnd + 1, srv._next_tasks, list(srv.executors),
+                comm_cost=srv._sched_comm_cost())
 
         partials = [r.partial for r in reports]   # already the wire copies
         ops = srv.algorithm.ops()
@@ -230,11 +453,16 @@ class BSPEngine(RoundEngine):
                                                  records)
         if not srv.overlap_scheduling:  # overlap path already recorded them
             srv.estimator.record_many(records)
-        makespan = max((r.virtual_time for r in reports), default=0.0)
         stats = srv.comm.stats.reset()
         extra = {"backup_tasks": float(n_backups)}
         if remapped:
             extra["remapped_tasks"] = float(remapped)
+        if netsim is not None:
+            extra.update(netsim.extra())
+            if makespan <= 0.0 and not any(r.n_tasks for r in reports):
+                idle += self._advance_past_gap(srv)
+        if idle:
+            extra["idle_time"] = idle
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,
@@ -251,8 +479,43 @@ class BSPEngine(RoundEngine):
         return metrics
 
     # ------------------------------------------------------------------
+    def _plan_drops(self, srv, schedule: Schedule, netsim: _NetSim
+                    ) -> Tuple[Dict[int, Set[int]], Set[int]]:
+        """Clients predicted to leave before their queue position completes
+        (cumulative span under the fitted model; optimistic during warmup,
+        when no model exists).  They are skipped at dispatch via the same
+        ``skip_clients`` hook the backup replicas use, and excluded from
+        failure re-runs — the round loses their contribution, exactly as a
+        real deployment would."""
+        models = srv.estimator.last_fit
+        avail, t0 = netsim.avail, netsim.t0
+        skip: Dict[int, Set[int]] = {}
+        dropped: Set[int] = set()
+        for k in list(srv.executors):
+            queue = schedule.queue(k)
+            if not queue:
+                continue
+            m = models.get(k)
+            t_off = 0.0
+            if netsim.net is not None:
+                t_off = netsim.net.download_time(
+                    [t.client for t in queue], netsim.payload_nbytes)
+            for task in queue:
+                dur = m.predict(task.n_samples) if m is not None else 0.0
+                if (not avail.available(task.client, t0)
+                        or avail.remaining(task.client, t0) < t_off + dur):
+                    skip.setdefault(k, set()).add(task.client)
+                    dropped.add(task.client)
+                else:
+                    t_off += dur
+        netsim.dropped += len(dropped)
+        return skip, dropped
+
+    # ------------------------------------------------------------------
     def _dispatch(self, srv, rnd: int, schedule: Schedule, payload: Dict,
-                  skip_map: Optional[Dict[int, Set[int]]] = None
+                  skip_map: Optional[Dict[int, Set[int]]] = None,
+                  netsim: Optional[_NetSim] = None,
+                  dropped: Optional[Set[int]] = None
                   ) -> Tuple[List[ExecutorReport], int]:
         live = list(srv.executors)
         srv.comm.broadcast(payload, live, tag="broadcast")
@@ -314,11 +577,13 @@ class BSPEngine(RoundEngine):
             if not survivors:
                 raise RuntimeError("all executors failed")
             # dedup by client: with backup duplicates a task can sit in two
-            # failed queues at once and must still re-run (and fold) once
+            # failed queues at once and must still re-run (and fold) once.
+            # Availability-dropped clients never re-run (they're offline).
             leftovers: List[ClientTask] = []
             for k in failed:
                 for t in schedule.queue(k):
-                    if t.client not in done_clients:
+                    if t.client not in done_clients and \
+                            t.client not in (dropped or ()):
                         done_clients.add(t.client)
                         leftovers.append(t)
                 srv._drop_executor(k)          # elastic K shrink
@@ -330,13 +595,20 @@ class BSPEngine(RoundEngine):
 
         # the partial that reaches aggregation is the one that crossed the
         # wire: compress once, ship, and aggregate the decompressed copy
-        # (error-feedback residuals and the aggregated values stay in sync)
+        # (error-feedback residuals and the aggregated values stay in sync).
+        # Under a network model the achieved wire size is measured here —
+        # it prices the upload leg of the barrier.
         for rep in reports:
-            srv.comm.executor_send(rep.executor,
-                                   srv._maybe_compress(rep.partial),
-                                   tag="partial")
-            rep.partial = srv._maybe_decompress(
-                srv.comm.recv_from_executor(rep.executor, tag="partial"))
+            if netsim is not None:
+                rep.partial, rep.wire_bytes = netsim.ship(rep.executor,
+                                                          rep.partial)
+            else:
+                srv.comm.executor_send(
+                    rep.executor,
+                    srv._maybe_compress(rep.partial, rep.executor),
+                    tag="partial")
+                rep.partial = srv._maybe_decompress(
+                    srv.comm.recv_from_executor(rep.executor, tag="partial"))
         return reports, len(failed)
 
 
@@ -383,16 +655,37 @@ class SemiSyncEngine(RoundEngine):
         from repro.core.round import RoundMetrics
         rnd = srv.round
         t_wall = time.perf_counter()
+        netsim = self._netsim(srv, srv.virtual_now)
 
         target = max(1, math.ceil(self.over_select * srv.clients_per_round))
         carried, self._carry = self._carry, []
+        if netsim is not None and netsim.avail is not None and carried:
+            # carried tasks bypass selection, so re-check them here: a
+            # client still offline stays in the carry pool for later rounds
+            online: List[ClientTask] = []
+            for t in carried:
+                (online if netsim.avail.available(t.client, srv.virtual_now)
+                 else self._carry).append(t)
+            carried = online
         n_fresh = max(0, target - len(carried))
         fresh = srv.select_clients(
             n=n_fresh, exclude=[t.client for t in carried])
         tasks = carried + fresh
-        schedule = srv.scheduler.schedule(rnd, tasks, list(srv.executors))
+        idle = 0.0
+        if not tasks and netsim is not None:
+            # exclude the carry pool: an offline carried client whose window
+            # opens at the jump target must not ALSO be selected fresh (its
+            # pending task would fold twice — once now, once from the carry)
+            tasks, idle = self._fast_forward_empty(
+                srv, lambda: srv.select_clients(
+                    n=target, exclude=[t.client for t in self._carry]))
+            netsim.t0 = srv.virtual_now
+        schedule = srv.scheduler.schedule(rnd, tasks, list(srv.executors),
+                                          comm_cost=srv._sched_comm_cost())
         payload = srv.algorithm.broadcast_payload(srv.params,
                                                   srv.server_state)
+        if netsim is not None:
+            netsim.set_payload(payload)
         live = list(srv.executors)
         srv.comm.broadcast(payload, live, tag="broadcast")
 
@@ -402,8 +695,11 @@ class SemiSyncEngine(RoundEngine):
         # chunk-granular predicted makespan of this schedule (the per-task
         # Eq.-4 prediction pays one offset b per *task* and would overshoot
         # a chunked round by ~(chunk-1)·b per chunk, leaving the deadline
-        # unreachable).  No models yet (warmup) -> ∞ -> a full BSP round.
-        pm = max((predict_remaining(models.get(k), schedule.queue(k), chunk)
+        # unreachable).  Comm delay joins the prediction when priced.
+        # No models yet (warmup) -> ∞ -> a full BSP round.
+        comm_pred = netsim.comm_pred if netsim is not None else None
+        pm = max((predict_remaining(models.get(k), schedule.queue(k), chunk,
+                                    comm_pred)
                   for k in live), default=0.0)
         deadline = self.deadline_frac * pm if pm > 0.0 else float("inf")
 
@@ -413,23 +709,32 @@ class SemiSyncEngine(RoundEngine):
         records: List[RunRecord] = []
         n_landed = 0
         n_failed = 0
+        t_hi = 0.0              # latest processed event (network makespan)
         for k in live:
             self._dispatch_next(srv, rnd, k, states, clock, payload, models,
-                                deadline, chunk)
+                                deadline, chunk, netsim)
         while clock:
             ev = clock.pop()
+            t_hi = max(t_hi, ev.time)
             if ev.kind == "chunk_done":
                 k, rep = ev.data
                 es = states[k]
                 es.t, es.inflight = ev.time, False
-                if rep.n_tasks:
+                if netsim is None and rep.n_tasks:
                     partials.append(self._wire(srv, k, rep.partial))
                     rec = self._chunk_record(srv, rnd, rep)
                     if rec is not None:
                         records.append(rec)
                     n_landed += rep.n_tasks
                 self._dispatch_next(srv, rnd, k, states, clock, payload,
-                                    models, deadline, chunk)
+                                    models, deadline, chunk, netsim)
+            elif ev.kind == "chunk_arrived":
+                # the chunk's upload landed: fold the wire copy it carried
+                ce = ev.data
+                partials.append(ce.partial)
+                if ce.record is not None:
+                    records.append(ce.record)
+                n_landed += ce.n_tasks
             else:  # executor_failed
                 dead, remaining = ev.data
                 n_failed += 1
@@ -442,7 +747,8 @@ class SemiSyncEngine(RoundEngine):
                         states[j].queue = []
                     elif not states[j].inflight:  # wake finished survivors
                         self._dispatch_next(srv, rnd, j, states, clock,
-                                            payload, models, deadline, chunk)
+                                            payload, models, deadline, chunk,
+                                            netsim)
 
         ops = srv.algorithm.ops()
         if partials:
@@ -457,7 +763,19 @@ class SemiSyncEngine(RoundEngine):
                                                  records)
         srv.estimator.record_many(records)
         makespan = max((es.t for es in states.values()), default=0.0)
+        if netsim is not None:
+            # the round is not over until the last counted upload landed
+            makespan = max(makespan, t_hi)
         stats = srv.comm.stats.reset()
+        extra = {"landed_clients": float(n_landed),
+                 "carried_tasks": float(len(self._carry)),
+                 "deadline": deadline}
+        if netsim is not None:
+            extra.update(netsim.extra())
+            if makespan <= 0.0 and n_landed == 0:
+                idle += self._advance_past_gap(srv)
+        if idle:
+            extra["idle_time"] = idle
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,
@@ -467,10 +785,9 @@ class SemiSyncEngine(RoundEngine):
             comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
             n_clients=len(tasks), n_executors=len(srv.executors),
             estimation_error=err, failures=n_failed,
-            extra={"landed_clients": float(n_landed),
-                   "carried_tasks": float(len(self._carry)),
-                   "deadline": deadline})
+            extra=extra)
         srv.history.append(metrics)
+        srv.virtual_now += makespan
         srv.round += 1
         if srv.checkpoint_manager is not None:
             srv.checkpoint_manager.maybe_save(srv)
@@ -478,38 +795,57 @@ class SemiSyncEngine(RoundEngine):
 
     # ------------------------------------------------------------------
     def _dispatch_next(self, srv, rnd, k, states, clock, payload, models,
-                       deadline, chunk) -> None:
+                       deadline, chunk, netsim=None) -> None:
         es = states[k]
-        if not es.queue or es.stopped or es.dead:
+        while es.queue and not es.stopped and not es.dead:
+            next_chunk = es.queue[:chunk]
+            comm_pred = netsim.comm_pred if netsim is not None else None
+            pred = predict_span(models.get(k), next_chunk, comm_pred)
+            start = max(es.t, clock.now)
+            if es.t > 0.0 and start + pred > deadline:
+                # predicted to miss the deadline: stop here, carry the rest
+                # (first chunk is exempt — a round always makes progress)
+                es.stopped = True
+                self._carry.extend(es.queue)
+                es.queue = []
+                return
+            es.queue = es.queue[chunk:]
+            if netsim is not None:
+                # availability dropout: offline / predicted-to-expire
+                # clients leave the chunk and re-enter through the carry
+                # pool (the deadline path's re-run mechanism)
+                next_chunk, av_dropped = netsim.split_available(
+                    next_chunk, start, pred)
+                self._carry.extend(av_dropped)
+                if not next_chunk:
+                    continue        # whole chunk offline: try the next one
+            try:
+                rep = srv.executors[k].run_queue(
+                    rnd, next_chunk, payload, srv.data_by_client,
+                    task_offset=es.offset)
+            except ExecutorFailure:
+                # the failing chunk never folded: every one of its clients
+                # must re-home along with the rest of the queue.  The
+                # executor is dead the moment the event is pushed — nothing
+                # may dispatch on it while the event waits in the queue.
+                clock.push(start, "executor_failed",
+                           (k, next_chunk + es.queue))
+                es.queue = []
+                es.dead = True
+                return
+            es.offset += len(next_chunk)
+            es.inflight = True
+            if netsim is None:
+                es.busy_until = start + rep.virtual_time
+                clock.push(es.busy_until, "chunk_done", (k, rep))
+                return
+            # comm-priced chunk: the executor is busy for download +
+            # compute, then free — the upload overlaps its next chunk and
+            # lands as its own arrival event, which is when the fold counts
+            es.busy_until = netsim.push_chunk(
+                clock, rep, start, (k, rep),
+                self._chunk_record(srv, rnd, rep), version=rnd)
             return
-        next_chunk = es.queue[:chunk]
-        pred = predict_span(models.get(k), next_chunk)
-        start = max(es.t, clock.now)
-        if es.t > 0.0 and start + pred > deadline:
-            # predicted to miss the deadline: stop here, carry the rest
-            # (first chunk is exempt — a round always makes progress)
-            es.stopped = True
-            self._carry.extend(es.queue)
-            es.queue = []
-            return
-        es.queue = es.queue[chunk:]
-        try:
-            rep = srv.executors[k].run_queue(
-                rnd, next_chunk, payload, srv.data_by_client,
-                task_offset=es.offset)
-        except ExecutorFailure:
-            # the failing chunk never folded: every one of its clients must
-            # re-home along with the rest of the queue.  The executor is
-            # dead the moment the event is pushed — nothing may dispatch on
-            # it while the event waits in the queue.
-            clock.push(start, "executor_failed", (k, next_chunk + es.queue))
-            es.queue = []
-            es.dead = True
-            return
-        es.offset += len(next_chunk)
-        es.inflight = True
-        es.busy_until = start + rep.virtual_time
-        clock.push(es.busy_until, "chunk_done", (k, rep))
 
 
 # ---------------------------------------------------------------------------
@@ -542,6 +878,7 @@ class AsyncEngine(RoundEngine):
         self.pipeline_depth = float(pipeline_depth)
         self.goal = goal
         self._states: Optional[Dict[int, _ExecState]] = None
+        self._pricer: Optional[_NetSim] = None   # persists across rounds
         self._clock = VirtualClock()
         self._in_system: Set[int] = set()
         self._last_update_t = 0.0
@@ -577,11 +914,16 @@ class AsyncEngine(RoundEngine):
         if self._states is None:
             return {"mode": self.mode, "initialized": False}
         clock = self._clock.state_dict()
-        clock["events"] = [
-            (t, seq, kind,
-             (data[0], _host_report(data[1]), data[2])
-             if kind == "chunk_done" else data)
-            for (t, seq, kind, data) in clock["events"]]
+
+        def host_event(kind, data):
+            if kind == "chunk_done":
+                return (data[0], _host_report(data[1]), data[2])
+            if kind == "chunk_arrived":    # in-flight upload (CommEvent)
+                return replace(data, partial=_host_tree(data.partial))
+            return data
+
+        clock["events"] = [(t, seq, kind, host_event(kind, data))
+                           for (t, seq, kind, data) in clock["events"]]
         return {
             "mode": self.mode, "initialized": True,
             "states": {k: dict(queue=list(es.queue), t=es.t,
@@ -627,22 +969,26 @@ class AsyncEngine(RoundEngine):
         self._last_sched = state["last_sched"]
 
     # ------------------------------------------------------------------
-    def _ensure_init(self, srv) -> None:
+    def _ensure_init(self, srv, netsim: Optional[_NetSim] = None) -> None:
         if self._states is not None:
             return
+        srv.virtual_now = self._clock.now
         self._payload = srv.algorithm.broadcast_payload(srv.params,
                                                         srv.server_state)
+        if netsim is not None:
+            netsim.set_payload(self._payload)
         live = list(srv.executors)
         srv.comm.broadcast(self._payload, live, tag="broadcast")
         n0 = max(1, math.ceil(self.pipeline_depth * srv.clients_per_round))
         tasks = srv.select_clients(n=n0)
-        schedule = srv.scheduler.schedule(srv.round, tasks, live)
+        schedule = srv.scheduler.schedule(srv.round, tasks, live,
+                                          comm_cost=srv._sched_comm_cost())
         self._last_sched = schedule
         self._states = {k: _ExecState(queue=list(schedule.queue(k)))
                         for k in live}
         self._in_system = {t.client for t in tasks}
         for k in live:
-            self._dispatch_next(srv, k)
+            self._dispatch_next(srv, k, netsim)
 
     def _refill(self, srv) -> None:
         """Top the pool back up with a fresh selection, re-scheduled onto
@@ -652,11 +998,13 @@ class AsyncEngine(RoundEngine):
         # an executor whose failure event is still in flight gets no new
         # work (it would only need re-homing when the event pops)
         live = [k for k in srv.executors if not self._states[k].dead]
+        srv.virtual_now = self._clock.now   # availability filter anchor
         fresh = srv.select_clients(n=srv.clients_per_round,
                                    exclude=self._in_system)
         if not fresh or not live:
             return
-        schedule = srv.scheduler.schedule(srv.round, fresh, live)
+        schedule = srv.scheduler.schedule(srv.round, fresh, live,
+                                          comm_cost=srv._sched_comm_cost())
         self._last_sched = schedule
         for k in live:
             # offset is NOT reset: fail_at's task index counts tasks
@@ -666,49 +1014,83 @@ class AsyncEngine(RoundEngine):
         self._in_system.update(t.client for t in fresh)
 
     # ------------------------------------------------------------------
-    def _dispatch_next(self, srv, k: int) -> None:
+    def _dispatch_next(self, srv, k: int,
+                       netsim: Optional[_NetSim] = None) -> None:
         es = self._states[k]
         if es.dead:
             return
         chunk = self._chunk_size(srv, self.chunk_size)
-        if not es.queue:
-            # work stealing: grab the tail chunk of the predicted-slowest
-            # queue (its owner was never going to reach it soon anyway)
-            victim = pick_steal_victim(
-                {j: s.queue for j, s in self._states.items()},
-                {j: (s.busy_until if s.inflight else s.t)
-                 for j, s in self._states.items()},
-                srv.estimator.last_fit, k, chunk)
-            if victim is None:
-                return            # nothing anywhere: idle until refill
-            vq = self._states[victim].queue
-            es.queue, self._states[victim].queue = vq[-chunk:], vq[:-chunk]
-            self._steals += 1
-        tasks, es.queue = es.queue[:chunk], es.queue[chunk:]
-        start = max(es.t, self._clock.now)
-        rnd = srv.round
-        try:
-            rep = srv.executors[k].run_queue(
-                rnd, tasks, self._payload, srv.data_by_client,
-                task_offset=es.offset)
-        except ExecutorFailure:
-            self._clock.push(start, "executor_failed", (k, tasks + es.queue))
-            es.queue = []
-            es.dead = True   # no re-dispatch while the event is in flight
+        comm_pred = netsim.comm_pred if netsim is not None else None
+        while True:
+            if not es.queue:
+                # work stealing: grab the tail chunk of the predicted-
+                # slowest queue (its owner was never going to reach it soon
+                # anyway)
+                victim = pick_steal_victim(
+                    {j: s.queue for j, s in self._states.items()},
+                    {j: (s.busy_until if s.inflight else s.t)
+                     for j, s in self._states.items()},
+                    srv.estimator.last_fit, k, chunk, comm_pred)
+                if victim is None:
+                    return        # nothing anywhere: idle until refill
+                vq = self._states[victim].queue
+                es.queue, self._states[victim].queue = \
+                    vq[-chunk:], vq[:-chunk]
+                self._steals += 1
+            tasks, es.queue = es.queue[:chunk], es.queue[chunk:]
+            start = max(es.t, self._clock.now)
+            if netsim is not None:
+                # availability dropout: dropped clients leave the system so
+                # a later refill can re-select them once they're back — the
+                # async re-run path
+                pred = predict_span(srv.estimator.last_fit.get(k), tasks,
+                                    comm_pred)
+                tasks, av_dropped = netsim.split_available(tasks, start,
+                                                           pred)
+                self._in_system.difference_update(
+                    t.client for t in av_dropped)
+                if not tasks:
+                    continue      # whole chunk offline: try the next one
+            rnd = srv.round
+            try:
+                rep = srv.executors[k].run_queue(
+                    rnd, tasks, self._payload, srv.data_by_client,
+                    task_offset=es.offset)
+            except ExecutorFailure:
+                self._clock.push(start, "executor_failed",
+                                 (k, tasks + es.queue))
+                es.queue = []
+                es.dead = True   # no re-dispatch while the event is in flight
+                return
+            es.offset += len(tasks)
+            es.inflight = True
+            if netsim is None:
+                es.busy_until = start + rep.virtual_time
+                self._clock.push(es.busy_until, "chunk_done", (k, rep, rnd))
+                return
+            # comm-priced chunk: busy for download + compute; the upload
+            # overlaps the next chunk and folds when its arrival event pops
+            # (staleness then counts server updates across the comm delay)
+            es.busy_until = netsim.push_chunk(
+                self._clock, rep, start, (k, rep, rnd),
+                self._chunk_record(srv, rnd, rep), version=rnd)
             return
-        es.offset += len(tasks)
-        es.inflight = True
-        es.busy_until = start + rep.virtual_time
-        self._clock.push(es.busy_until, "chunk_done", (k, rep, rnd))
 
     # ------------------------------------------------------------------
     def run_round(self, srv):
         from repro.core.round import RoundMetrics
         t_wall = time.perf_counter()
-        self._ensure_init(srv)
+        # ONE pricer for the engine's whole life (the pipeline crosses
+        # round boundaries, so tail dispatches must bill the next window);
+        # the async clock is already absolute, so it anchors at t0=0
+        if self._pricer is None:
+            self._pricer = self._netsim(srv, 0.0)
+        netsim = self._pricer
+        self._ensure_init(srv, netsim)
         rnd = srv.round
         goal = self.goal or srv.clients_per_round
 
+        futile_wakes = 0   # boundary-jumps without a single dispatch
         while self._n_folded < goal:
             if not self._clock:
                 if self._n_folded > 0:
@@ -716,17 +1098,42 @@ class AsyncEngine(RoundEngine):
                 self._refill(srv)
                 for k in list(self._states):
                     if not self._states[k].inflight:
-                        self._dispatch_next(srv, k)
+                        self._dispatch_next(srv, k, netsim)
                 if not self._clock:
+                    if netsim is not None and netsim.avail is not None:
+                        # nobody dispatchable: sleep until the next client
+                        # comes online — or, if clients are online but every
+                        # dispatch predicted a mid-chunk expiry, until an
+                        # availability window flips (waking "now" would spin
+                        # the select/drop cycle nanosecond by nanosecond)
+                        t_next = srv._next_available_time(
+                            exclude=self._in_system)
+                        if t_next <= self._clock.now:
+                            t_next = srv._next_availability_change(
+                                exclude=self._in_system)
+                        futile_wakes += 1
+                        if math.isfinite(t_next) and futile_wakes <= 256:
+                            self._clock.push(
+                                max(t_next, self._clock.now + 1e-9),
+                                "wake", None)
+                            continue
+                        if futile_wakes > 256:
+                            raise RuntimeError(
+                                "async engine starved: every availability "
+                                "window is predicted too short for a chunk "
+                                "(256 futile window-boundary jumps)")
                     raise RuntimeError("async engine starved: no runnable "
                                        "clients on any executor")
                 continue
             ev = self._clock.pop()
+            srv.virtual_now = self._clock.now
+            if ev.kind != "wake":
+                futile_wakes = 0          # real progress resets the bound
             if ev.kind == "chunk_done":
                 k, rep, version = ev.data
                 es = self._states[k]
                 es.t, es.inflight = ev.time, False
-                if rep.n_tasks:
+                if netsim is None and rep.n_tasks:
                     wire = self._wire(srv, k, rep.partial)
                     s = srv.round - version
                     gamma = staleness_weight(s, self.staleness_lambda)
@@ -740,7 +1147,27 @@ class AsyncEngine(RoundEngine):
                     if rec is not None:
                         self._records.append(rec)
                     self._in_system.difference_update(rep.completed_clients)
-                self._dispatch_next(srv, k)
+                self._dispatch_next(srv, k, netsim)
+            elif ev.kind == "chunk_arrived":
+                # the upload landed: fold it, discounted by the staleness
+                # accrued across compute AND comm delay
+                ce = ev.data
+                s = srv.round - ce.version
+                gamma = staleness_weight(s, self.staleness_lambda)
+                self._buffer = merge_partials(
+                    self._buffer, scale_partial(ce.partial, gamma))
+                self._n_folded += ce.n_tasks
+                if s > 0:
+                    self._stale_folds += 1
+                self._stale_sum += s
+                if ce.record is not None:
+                    self._records.append(ce.record)
+                self._in_system.difference_update(ce.completed_clients)
+            elif ev.kind == "wake":
+                self._refill(srv)
+                for k in list(self._states):
+                    if not self._states[k].inflight:
+                        self._dispatch_next(srv, k, netsim)
             else:  # executor_failed
                 dead, remaining = ev.data
                 self._n_failed += 1
@@ -748,7 +1175,7 @@ class AsyncEngine(RoundEngine):
                                             remaining)
                 for j in survivors:
                     if not self._states[j].inflight:
-                        self._dispatch_next(srv, j)
+                        self._dispatch_next(srv, j, netsim)
 
         # ---- server update (one bounded-staleness window == one round) ---
         ops = srv.algorithm.ops()
@@ -764,9 +1191,19 @@ class AsyncEngine(RoundEngine):
         srv.estimator.record_many(self._records)
         makespan = self._clock.now - self._last_update_t
         self._last_update_t = self._clock.now
+        srv.virtual_now = self._clock.now
         stats = srv.comm.stats.reset()
         sched = self._last_sched
         n_folds = max(len(self._records), 1)
+        extra = {"steals": float(self._steals),
+                 "stale_folds": float(self._stale_folds),
+                 "mean_staleness": self._stale_sum / n_folds,
+                 "in_system": float(len(self._in_system))}
+        if netsim is not None:
+            extra.update(netsim.extra())
+            # tail dispatches below happen after this window's metrics were
+            # read: their comm bills the NEXT window on the shared pricer
+            netsim.reset_counters()
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,
@@ -777,10 +1214,7 @@ class AsyncEngine(RoundEngine):
             comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
             n_clients=self._n_folded, n_executors=len(srv.executors),
             estimation_error=err, failures=self._n_failed,
-            extra={"steals": float(self._steals),
-                   "stale_folds": float(self._stale_folds),
-                   "mean_staleness": self._stale_sum / n_folds,
-                   "in_system": float(len(self._in_system))})
+            extra=extra)
         srv.history.append(metrics)
         srv.round += 1
         self._reset_window()
@@ -789,12 +1223,14 @@ class AsyncEngine(RoundEngine):
         # stats), top the pool up, wake idle executors
         self._payload = srv.algorithm.broadcast_payload(srv.params,
                                                         srv.server_state)
+        if netsim is not None:
+            netsim.set_payload(self._payload)
         srv.comm.broadcast(self._payload, list(srv.executors),
                            tag="broadcast")
         self._refill(srv)
         for k in list(self._states):
             if not self._states[k].inflight:
-                self._dispatch_next(srv, k)
+                self._dispatch_next(srv, k, netsim)
 
         if srv.checkpoint_manager is not None:
             srv.checkpoint_manager.maybe_save(srv)

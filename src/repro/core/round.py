@@ -31,6 +31,7 @@ individually) for the Table-1 comparison benchmarks.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
@@ -42,6 +43,7 @@ from repro.comm.local import LocalComm
 from repro.core.aggregation import flat_aggregate, global_aggregate
 from repro.core.algorithms import ClientData, FLAlgorithm
 from repro.core.executor import SequentialExecutor
+from repro.core.network import ClientAvailability, NetworkModel
 from repro.core.placement import DevicePlacement
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
 from repro.core.workload import WorkloadEstimator
@@ -83,6 +85,8 @@ class ParrotServer:
                  engine_opts: Optional[Dict[str, Any]] = None,
                  placement: Optional[DevicePlacement] = None,
                  gang_dispatch: bool = True,
+                 network: Optional[NetworkModel] = None,
+                 availability: Optional[ClientAvailability] = None,
                  seed: int = 0):
         from repro.core.engine import make_engine
         self.params = params
@@ -113,6 +117,17 @@ class ParrotServer:
         self.compressor = compressor
         self.checkpoint_manager = checkpoint_manager
         self.mode = mode
+        # trace-driven network & availability simulation (DESIGN.md §9):
+        # None for both (the default) keeps every engine on its pre-network
+        # code path bit-exactly — params AND makespan histories unchanged
+        self.network = network
+        self.availability = availability
+        # cumulative simulated time across rounds — the availability axis
+        # (BSP / semi-sync advance it by each round's makespan; async pins
+        # it to its persistent clock)
+        self.virtual_now = 0.0
+        self._last_payload_nbytes = 0    # comm-cost estimates (round r-1's)
+        self._wire_ratio = 1.0           # achieved wire/raw compression ratio
         self.parallel_dispatch = parallel_dispatch
         self.overlap_scheduling = overlap_scheduling
         self.backup_fraction = backup_fraction
@@ -140,12 +155,17 @@ class ParrotServer:
                        exclude: Optional[Any] = None) -> List[ClientTask]:
         """Sample the round's cohort without replacement.  ``n`` overrides
         ``clients_per_round`` (semi-sync over-selection, async refills);
-        ``exclude`` removes clients already in flight.  The default call is
+        ``exclude`` removes clients already in flight.  With an availability
+        model, clients offline at the current virtual time are filtered
+        before sampling.  The default call (``availability=None``) is
         rng-identical to the original BSP selection."""
         if exclude:
             pool = sorted(set(self.data_by_client) - set(exclude))
         else:
             pool = sorted(self.data_by_client)
+        if self.availability is not None:
+            pool = [c for c in pool
+                    if self.availability.available(c, self.virtual_now)]
         size = min(self.clients_per_round if n is None else n, len(pool))
         if size <= 0:
             return []
@@ -202,10 +222,62 @@ class ParrotServer:
         if self.placement is not None:
             self.placement.release(k)
 
-    def _maybe_compress(self, partial: Dict) -> Dict:
+    # ------------------------------------------------------------------
+    # network/availability plumbing (no-ops when both are None)
+    def _sched_comm_cost(self):
+        """Per-task comm-cost closure for the scheduler's Eq. 4 (None when
+        no network is modelled).  Prices one client round-trip at the last
+        broadcast's size and the compressor's last achieved wire ratio —
+        round 0 prices latency only (no payload has been sized yet), which
+        the uniform warmup schedule ignores anyway."""
+        if self.network is None:
+            return None
+        net, down = self.network, self._last_payload_nbytes
+        up = int(down * self._wire_ratio)
+        return lambda task: net.client_comm_time(task.client, down, up)
+
+    def _next_available_time(self, exclude: Optional[Any] = None) -> float:
+        """Earliest virtual time any selectable client comes online (inf if
+        never) — the engines fast-forward an empty round to it."""
+        if self.availability is None:
+            return self.virtual_now
+        pool = sorted(set(self.data_by_client) - set(exclude or ()))
+        return min((self.availability.next_available(c, self.virtual_now)
+                    for c in pool), default=float("inf"))
+
+    def _next_availability_change(self, exclude: Optional[Any] = None
+                                  ) -> float:
+        """Earliest FUTURE instant any selectable client's availability
+        flips: window start for offline clients, window *end* for online
+        ones.  The fast-forward target when a round made zero progress even
+        though clients are nominally online — every dropped client was
+        predicted to expire mid-chunk, and within its current window that
+        prediction can only get worse, so time must jump past a window
+        boundary for the availability state to change at all."""
+        if self.availability is None:
+            return float("inf")
+        t = self.virtual_now
+        best = float("inf")
+        for c in sorted(set(self.data_by_client) - set(exclude or ())):
+            if self.availability.available(c, t):
+                r = self.availability.remaining(c, t)
+                if math.isfinite(r) and r > 0:
+                    best = min(best, t + r)
+            else:
+                nxt = self.availability.next_available(c, t)
+                if nxt > t:
+                    best = min(best, nxt)
+        return best
+
+    def _maybe_compress(self, partial: Dict,
+                        executor: Optional[int] = None) -> Dict:
         if self.compressor is None:
             return partial
-        return self.compressor.compress_partial(partial)
+        # key stateful compressor state (top-k error-feedback residuals) by
+        # the sending executor: each executor owns its residual stream, so
+        # compressed values don't depend on cross-executor ship order
+        return self.compressor.compress_partial(
+            partial, key=None if executor is None else f"exec{executor}")
 
     def _maybe_decompress(self, partial: Dict) -> Dict:
         if self.compressor is None:

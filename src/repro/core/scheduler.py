@@ -30,9 +30,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.workload import DEFAULT_MODEL, WorkloadEstimator, WorkloadModel
+
+#: predicted comm seconds for a chunk's client ids (engines bind a
+#: NetworkModel + the round's payload size into one of these; None = the
+#: pre-network behaviour, comm is free)
+ChunkCommCost = Callable[[Sequence[int]], float]
 
 
 @dataclass(frozen=True)
@@ -97,7 +102,16 @@ class ParrotScheduler:
         self.policy = policy
 
     def schedule(self, rnd: int, tasks: Sequence[ClientTask],
-                 executors: Sequence[int]) -> Schedule:
+                 executors: Sequence[int],
+                 comm_cost: Optional[Callable[[ClientTask], float]] = None
+                 ) -> Schedule:
+        """``comm_cost`` (network-aware runs) prices one task's round-trip
+        comm — download the payload, upload the update on the client's link
+        (Eq. 4's offset becomes payload- and bandwidth-aware).  The addend
+        is executor-independent so it never flips a single argmin, but it
+        accumulates into ``w[k]``: an executor whose queue holds slow-link
+        clients looks fuller, and later tasks route around it — LPT then
+        balances compute *plus* comm."""
         t0 = time.perf_counter()
         executors = list(executors)
         if self.policy == "none":
@@ -126,9 +140,10 @@ class ParrotScheduler:
             avg = DEFAULT_MODEL
         mdl = {k: models.get(k, avg) for k in executors}
         for task in sorted(tasks, key=lambda t: -t.n_samples):   # LPT order
+            t_comm = comm_cost(task) if comm_cost is not None else 0.0
             best_k, best_w = None, float("inf")
             for k in executors:                                   # Eq. 4
-                cand = w[k] + mdl[k].predict(task.n_samples)
+                cand = w[k] + mdl[k].predict(task.n_samples) + t_comm
                 if cand < best_w:
                     best_k, best_w = k, cand
             assignment[best_k].append(task)
@@ -151,37 +166,47 @@ def split_chunks(tasks: Sequence[ClientTask],
 
 
 def predict_span(model: Optional[WorkloadModel],
-                 tasks: Sequence[ClientTask]) -> float:
+                 tasks: Sequence[ClientTask],
+                 comm: Optional[ChunkCommCost] = None) -> float:
     """Predicted virtual duration of one chunk run on an executor: Eq. 2 at
     the chunk's total sample count (chunk records fit b per chunk, so one
-    offset per span — not one per task).  No model yet -> 0.0, i.e. always
-    optimistic during warmup."""
+    offset per span — not one per task), plus the chunk's predicted comm
+    time when a ``comm`` cost is bound (records stay compute-only, so the
+    network term is added analytically, never fitted).  No model yet ->
+    0.0, i.e. always optimistic during warmup — comm included, otherwise a
+    warmup deadline would be pure comm and carry every chunk."""
     if model is None or not tasks:
         return 0.0
-    return model.predict(sum(t.n_samples for t in tasks))
+    out = model.predict(sum(t.n_samples for t in tasks))
+    if comm is not None:
+        out += comm([t.client for t in tasks])
+    return out
 
 
 def predict_remaining(model: Optional[WorkloadModel],
-                      tasks: Sequence[ClientTask], chunk_size: int) -> float:
+                      tasks: Sequence[ClientTask], chunk_size: int,
+                      comm: Optional[ChunkCommCost] = None) -> float:
     """Predicted time to drain a queue chunk-by-chunk."""
-    return sum(predict_span(model, c) for c in split_chunks(tasks, chunk_size))
+    return sum(predict_span(model, c, comm)
+               for c in split_chunks(tasks, chunk_size))
 
 
 def pick_steal_victim(queues: Dict[int, List[ClientTask]],
                       avail: Dict[int, float],
                       models: Dict[int, WorkloadModel],
-                      thief: int, chunk_size: int) -> Optional[int]:
+                      thief: int, chunk_size: int,
+                      comm: Optional[ChunkCommCost] = None) -> Optional[int]:
     """The executor an idle ``thief`` should steal a chunk from: the one
     whose *predicted completion time* (availability + remaining queue under
-    its fitted model) is largest — the predicted straggler.  Ties break on
-    the lower executor id (deterministic).  Returns None when nobody has
-    stealable work."""
+    its fitted model, comm included when priced) is largest — the predicted
+    straggler.  Ties break on the lower executor id (deterministic).
+    Returns None when nobody has stealable work."""
     best_k, best_t = None, -float("inf")
     for k in sorted(queues):
         if k == thief or not queues[k]:
             continue
         done_at = avail.get(k, 0.0) + predict_remaining(
-            models.get(k), queues[k], chunk_size)
+            models.get(k), queues[k], chunk_size, comm)
         if done_at > best_t:
             best_k, best_t = k, done_at
     return best_k

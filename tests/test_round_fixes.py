@@ -52,7 +52,7 @@ class _ZeroingCompressor:
     the zeros, the global delta is zero and params cannot move; the old bug
     aggregated the executor-local (uncompressed) partial instead."""
 
-    def compress_partial(self, partial):
+    def compress_partial(self, partial, key=None):
         out = dict(partial)
         sums = partial["sums"]
         out["sums"] = {"__flat__": True,
@@ -69,7 +69,7 @@ class _ScalingCompressor:
     Params must land exactly where the uncompressed run lands — only true
     when decompress is applied to the received wire copy."""
 
-    def compress_partial(self, partial):
+    def compress_partial(self, partial, key=None):
         out = dict(partial)
         out["sums"] = {"__flat__": True,
                        "buffers": {g: b * 2.0
@@ -114,7 +114,9 @@ def test_topk_error_feedback_stays_in_sync_with_wire():
     # sparsified aggregation differs from dense but must stay in the same
     # neighbourhood thanks to error feedback
     diff = _max_diff(srv_c.params, srv.params)
-    assert 0.0 < diff < 0.05
+    # residual streams are per-executor (keyed by the server), which moves
+    # the sparsified trajectory slightly vs the old shared-residual runs
+    assert 0.0 < diff < 0.08
 
 
 # ---------------------------------------------------------------------------
