@@ -1,0 +1,103 @@
+"""Fault-tolerance cost curves (DESIGN.md §10): virtual makespan and final
+eval loss over a fault-rate grid, with quorum-degraded rounds on and off,
+for the bsp and semi-sync engines.
+
+Each cell runs the same seeded workload under a ``FaultPlan.random`` chaos
+plan whose event rates scale with the grid's ``rate`` knob (dropouts at
+``rate``/s; crashes, corruption and slowdowns at fractions of it), over a
+lognormal-ish uniform network so retries and blackout pricing bill real
+virtual time.  The quorum-off column shows what degraded rounds buy back:
+at quorum 0.7 a straggling or retrying tail no longer gates the commit.
+
+Virtual time uses ``TickTimer`` so makespans are deterministic functions of
+the schedule, not of host jitter — the same discipline the engine tests use.
+
+``BENCH_FAULTS_ROUNDS`` overrides the round count (CI smoke runs few).
+"""
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import NetworkModel, TickTimer
+from repro.core.faults import FaultPlan, RetryPolicy
+
+ROUNDS = int(os.environ.get("BENCH_FAULTS_ROUNDS", "12"))
+K = 4
+N_CLIENTS = 60
+CLIENTS_PER_ROUND = 16
+RATES = [0.0, 0.02, 0.05]
+QUORUMS = [1.0, 0.7]
+
+ENGINES = [
+    ("bsp", "bsp", {}),
+    ("semi_sync", "semi-sync", {"deadline_frac": 0.6, "over_select": 1.2,
+                                "chunk_size": 4}),
+]
+
+
+def _plan(rate: float) -> FaultPlan:
+    if rate <= 0.0:
+        return None
+    # one plan seed for the whole grid: the rate knob scales event density,
+    # not placement luck
+    # ~4 virtual s per round under this workload: the horizon tracks the
+    # run's actual span so the rate knob means what it says
+    return FaultPlan.random(
+        seed=9, horizon=float(ROUNDS) * 4.0,
+        executors=list(range(K)), clients=list(range(N_CLIENTS)),
+        crash_rate=rate * 0.3, restart_delay=6.0,
+        dropout_rate=rate, dropout_duration=5.0,
+        corrupt_rate=rate * 0.5,
+        blackout_rate=rate * 0.2, blackout_duration=1.5,
+        slowdown_rate=rate * 0.3, slowdown_duration=8.0,
+        slowdown_factor=3.0)
+
+
+def _tot(srv, key) -> int:
+    return int(sum(m.extra.get(key, 0) for m in srv.history))
+
+
+def _cell(engine: str, opts: dict, rate: float, quorum: float) -> dict:
+    srv = common.build_server(
+        n_clients=N_CLIENTS, clients_per_round=CLIENTS_PER_ROUND, K=K,
+        speed_model=lambda k, r: 0.0, timer=TickTimer(1.0),
+        warmup_rounds=2, round_engine=engine,
+        engine_opts=dict(opts, quorum_frac=quorum),
+        network=NetworkModel.uniform(12e6, 24e6, latency_s=0.03),
+        faults=_plan(rate),
+        retry=RetryPolicy(timeout_s=8.0, max_retries=2, backoff_s=0.5))
+    metrics = [srv.run_round() for _ in range(ROUNDS)]
+    return {
+        "makespan_s": float(np.mean([m.makespan for m in metrics])),
+        "loss": common.eval_loss(srv),
+        "retries": _tot(srv, "retries"),
+        "dropped": _tot(srv, "dropped_clients"),
+        "crashes": _tot(srv, "fault_crashes"),
+        "quorum_commits": _tot(srv, "quorum_commits"),
+    }
+
+
+def run() -> None:
+    for name, engine, opts in ENGINES:
+        by_key = {}
+        for rate in RATES:
+            for q in QUORUMS:
+                r = _cell(engine, opts, rate, q)
+                by_key[(rate, q)] = r
+                common.emit(
+                    f"faults/{name}/rate{rate:g}/q{q:g}/makespan",
+                    r["makespan_s"] * 1e6,
+                    f"loss={r['loss']:.4f} retries={r['retries']} "
+                    f"dropped={r['dropped']} crashes={r['crashes']} "
+                    f"quorum_commits={r['quorum_commits']}")
+        # what degraded rounds buy at the top fault rate
+        top = max(RATES)
+        full, deg = by_key[(top, 1.0)], by_key[(top, QUORUMS[-1])]
+        red = 100.0 * (1.0 - deg["makespan_s"] / max(full["makespan_s"],
+                                                     1e-12))
+        dloss = 100.0 * (deg["loss"] - full["loss"]) / max(full["loss"],
+                                                           1e-12)
+        common.emit(f"faults/{name}/quorum_gain", red,
+                    f"makespan_reduction_pct={red:.1f} "
+                    f"loss_delta_pct={dloss:+.2f} at_rate={top:g}")

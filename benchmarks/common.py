@@ -70,7 +70,8 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                  partition_arg=5.0, compressor=None, seed=0, local_epochs=1,
                  warmup_rounds=1, round_engine="bsp",
                  engine_opts=None, network=None,
-                 availability=None) -> ParrotServer:
+                 availability=None, faults=None, retry=None,
+                 timer=None) -> ParrotServer:
     data = make_classification_clients(
         n_clients, dim=32, n_classes=10, partition=partition,
         partition_arg=partition_arg, mean_samples=60, batch_size=20,
@@ -78,7 +79,8 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
     algo = make_algorithm(algorithm, GRAD_FN, 0.05, local_epochs=local_epochs)
     sm = ClientStateManager(tempfile.mkdtemp(prefix="bench_state_"))
     execs = [SequentialExecutor(k, algo, state_manager=sm,
-                                speed_model=speed_model) for k in range(K)]
+                                speed_model=speed_model, timer=timer)
+             for k in range(K)]
     return ParrotServer(params=mlp_params(), algorithm=algo, executors=execs,
                         data_by_client=data,
                         clients_per_round=clients_per_round,
@@ -86,6 +88,7 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                         warmup_rounds=warmup_rounds, compressor=compressor,
                         round_engine=round_engine, engine_opts=engine_opts,
                         network=network, availability=availability,
+                        faults=faults, retry=retry,
                         seed=seed)
 
 

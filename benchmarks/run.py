@@ -26,6 +26,8 @@ Mapping to the paper:
                       compressor grid + diurnal availability
   bench_device_scaling — device-parallel executors: steps/s at 1/2/4 virtual
                       devices (subprocess cells) + params bit-parity
+  bench_fault_tolerance — makespan / final-loss over a fault-rate grid,
+                      quorum-degraded rounds on vs off (alias: faults)
   bench_kernels     — Pallas wrapper micro-timings (plumbing check)
   roofline          — §Roofline terms from the dry-run artifacts
 """
@@ -42,7 +44,11 @@ sys.path.insert(0, _ROOT)
 MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
         "bench_memory", "bench_comm", "bench_algorithms",
         "bench_aggregation", "bench_client_training", "bench_round_modes",
-        "bench_network", "bench_device_scaling", "bench_kernels", "roofline"]
+        "bench_network", "bench_device_scaling", "bench_fault_tolerance",
+        "bench_kernels", "roofline"]
+
+# convenience aliases on top of the bench_ prefix rule
+ALIASES = {"faults": "bench_fault_tolerance"}
 
 
 def main(argv=None) -> None:
@@ -64,6 +70,7 @@ def main(argv=None) -> None:
     if args.only and not only:
         p.error("--only given but no module names resolved")
     # accept short names too: "round_modes" == "bench_round_modes"
+    only = {ALIASES.get(m, m) for m in only}
     only = {m if m in MODS else f"bench_{m}" for m in only}
     unknown = only - set(MODS)
     if unknown:

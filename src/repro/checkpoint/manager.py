@@ -13,11 +13,23 @@ Layout:
   <dir>/LATEST            — text file naming the newest complete step
 
 Writes go to a temp dir then ``os.replace`` into place, so a crash mid-save
-never corrupts the previous checkpoint.  ``restore_latest`` walks backwards
-past torn checkpoints.  ``keep`` bounds retained checkpoints (GC).
+never corrupts the previous checkpoint.  The manifest additionally records a
+sha256 digest of the params (``params_digest``); ``restore`` re-computes it
+from the loaded blob and refuses a checkpoint whose bytes rotted or were
+tampered with *before* mutating the server — a failed restore leaves the
+server untouched.  ``restore_latest`` walks backwards past torn AND corrupt
+checkpoints.  ``keep`` bounds retained checkpoints (GC).
+
+Crash recovery (DESIGN.md §10): the blob carries the executor topology and
+the fault injector's runtime state, so ``ParrotServer.run(...,
+auto_resume=True)`` after a mid-round kill restores the last durable round
+boundary — executors that were crashed at save time are retired on restore
+(their scheduled restart revives and re-pins them later) — and replays the
+remaining rounds deterministically.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pickle
@@ -28,6 +40,20 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+
+def params_digest(params: Any) -> str:
+    """sha256 over the params pytree's leaves (host bytes, in tree order,
+    shape/dtype tagged so a reshaped-but-identical buffer cannot collide).
+    The integrity check for checkpoint blobs — and the equality witness the
+    chaos/resume tests compare across runs."""
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
 
 
 class CheckpointManager:
@@ -71,8 +97,15 @@ class CheckpointManager:
                 "virtual_now": server.virtual_now,
                 "last_payload_nbytes": server._last_payload_nbytes,
                 "wire_ratio": server._wire_ratio,
+                # fault-injection runtime state (fired one-shot events,
+                # per-client retry budgets): a resumed run must replay the
+                # REMAINING fault plan, not the whole plan from t=0
+                "faults": (server.faults.state_dict()
+                           if getattr(server, "faults", None) is not None
+                           else None),
                 "time": time.time(),
             }
+            digest = params_digest(blob["params"])
             with open(os.path.join(tmp, "server.pkl"), "wb") as f:
                 pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
             # client-state shards (stateful algorithms)
@@ -81,7 +114,8 @@ class CheckpointManager:
                 if ex.state_manager is not None:
                     ex.state_manager.checkpoint(state_dir)
             with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
-                json.dump({"round": rnd, "complete": True}, f)
+                json.dump({"round": rnd, "complete": True,
+                           "params_digest": digest}, f)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.replace(tmp, final)
@@ -108,8 +142,20 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def restore(self, server: Any, step_dir: str) -> int:
+        # load + verify BEFORE touching the server: a corrupt blob (bit rot,
+        # torn write that somehow kept its manifest, tampering) must raise
+        # with the server still in its pre-restore state
         with open(os.path.join(step_dir, "server.pkl"), "rb") as f:
             blob = pickle.load(f)
+        manifest_path = os.path.join(step_dir, "MANIFEST.json")
+        if os.path.exists(manifest_path):
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+            want = manifest.get("params_digest")
+            if want is not None and params_digest(blob["params"]) != want:
+                raise ValueError(
+                    f"checkpoint {step_dir} failed integrity check: params "
+                    f"digest mismatch (expected {want[:12]}…)")
         server.params = jax.tree.map(jax.numpy.asarray, blob["params"])
         server.server_state = jax.tree.map(jax.numpy.asarray,
                                            blob["server_state"])
@@ -124,6 +170,20 @@ class CheckpointManager:
         server._last_payload_nbytes = int(blob.get("last_payload_nbytes", 0))
         server._wire_ratio = float(blob.get("wire_ratio", 1.0))
         server.engine.load_state_dict(blob.get("engine"))
+        if getattr(server, "faults", None) is not None:
+            server.faults.load_state_dict(blob.get("faults"))
+        # reconcile the executor topology with the checkpointed one: a
+        # fresh server is constructed with the FULL executor set, but the
+        # saved run may have had some crashed — retire those (releasing
+        # their pins) so the resumed run schedules on the same live set;
+        # their scheduled restart events revive them later.  Executors the
+        # blob knows but this server lacks can't be conjured — that is a
+        # configuration error the engines will surface.
+        want_ids = set(blob.get("executor_ids", server.executors))
+        for k in sorted(set(server.executors) - want_ids):
+            server._drop_executor(k)
+        for k in sorted(want_ids - set(server.executors)):
+            server._revive_executor(k)
         state_dir = os.path.join(step_dir, "state")
         if os.path.isdir(state_dir):
             for ex in server.executors.values():

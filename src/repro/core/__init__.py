@@ -15,6 +15,8 @@
   network.py                 — trace-driven network & availability
                                simulation (comm-aware virtual clock, §9)
   compression.py             — delta compression (top-k EF / int8)
+  faults.py                  — fault injection & recovery (seeded chaos
+                               plans, chunk timeouts/retry, §10)
 """
 from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
                                     flat_aggregate, global_aggregate)
@@ -26,6 +28,8 @@ from repro.core.clock import TickTimer, VirtualClock
 from repro.core.engine import (AsyncEngine, BSPEngine, RoundEngine,
                                SemiSyncEngine, make_engine)
 from repro.core.executor import SequentialExecutor
+from repro.core.faults import (FaultEvent, FaultInjector, FaultPlan,
+                               RetryPolicy)
 from repro.core.network import (ClientAvailability, CommEvent, LinkProfile,
                                 NetworkModel)
 from repro.core.placement import DevicePlacement
@@ -39,10 +43,11 @@ __all__ = [
     "ClientData", "ClientResult",
     "ClientStateManager", "ClientStepEngine", "ClientTask", "CommEvent",
     "DevicePlacement",
-    "FLAlgorithm",
+    "FLAlgorithm", "FaultEvent", "FaultInjector", "FaultPlan",
     "FlatLayout", "LinkProfile", "LocalAggregator", "NetworkModel", "Op",
     "ParrotScheduler",
-    "ParrotServer", "RoundEngine", "RoundMetrics", "RunRecord", "Schedule",
+    "ParrotServer", "RetryPolicy",
+    "RoundEngine", "RoundMetrics", "RunRecord", "Schedule",
     "SemiSyncEngine", "SequentialExecutor", "TickTimer", "VirtualClock",
     "WorkloadEstimator", "WorkloadModel",
     "engine_for", "flat_aggregate", "global_aggregate", "make_algorithm",

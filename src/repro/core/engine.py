@@ -61,6 +61,7 @@ from repro.core.aggregation import (merge_partials, scale_partial,
                                     staleness_weight, wire_bytes)
 from repro.core.clock import VirtualClock
 from repro.core.executor import ExecutorFailure, ExecutorReport
+from repro.core.faults import FaultCounters, scale_report
 from repro.core.network import CommEvent
 from repro.core.scheduler import (ClientTask, Schedule, pick_steal_victim,
                                   predict_remaining, predict_span)
@@ -78,6 +79,13 @@ def _ship_partial(srv, executor: int, compressed: Dict) -> Dict:
     if wire is None:
         wire = srv.comm.recv_from_executor(executor, tag="partial")
     return srv._maybe_decompress(wire)
+
+
+def _tasks_of(srv, clients) -> List[ClientTask]:
+    """Rebuild ClientTasks from client ids (fault re-run pools carry ids —
+    the sample counts come from the server's dataset registry)."""
+    return [ClientTask(int(c), srv.data_by_client[int(c)].n_samples)
+            for c in clients]
 
 
 def _host_tree(tree):
@@ -178,19 +186,45 @@ class _NetSim:
         return _ship_partial(srv, executor, comp), nb
 
     def push_chunk(self, clock: VirtualClock, rep: ExecutorReport,
-                   start: float, done_data, record, version: int) -> float:
+                   start: float, done_data, record, version: int,
+                   fi=None, counters: Optional[FaultCounters] = None
+                   ) -> float:
         """Push one completed chunk's comm-priced event pair: ``chunk_done``
         at download+compute (the executor frees; ``done_data`` is the
         engine's handler payload) and — when the chunk did work — a
         ``chunk_arrived`` :class:`CommEvent` at +upload carrying the wire
         partial.  The single definition both DES engines dispatch through.
-        Returns the compute-done time (the executor's ``busy_until``)."""
+        Returns the compute-done time (the executor's ``busy_until``).
+
+        With a :class:`FaultInjector` (``fi``) the upload leg additionally
+        sees blackout pauses and the chunk timeout with backed-off re-sends
+        (each re-send re-priced through the network model), then mid-upload
+        client dropout; a payload lost in transit surfaces as an
+        ``upload_lost`` event so each engine routes the clients into its
+        own re-run pool.  ``fi=None`` keeps the pricing bit-exact."""
         t_c = start + self.down(rep.completed_clients) + rep.virtual_time
         clock.push(t_c, "chunk_done", done_data)
         if rep.n_tasks:
             wirep, nb = self.ship(rep.executor, rep.partial)
             rep.wire_bytes = nb
-            t_arr = t_c + self.up(rep.completed_clients, nb)
+            up_s = self.up(rep.completed_clients, nb)
+            if fi is None:
+                t_arr = t_c + up_s
+            else:
+                # fault queries run on the absolute axis: t0 anchors this
+                # round's local event times on srv.virtual_now
+                t_abs = fi.price_upload(self.t0 + t_c, up_s, self,
+                                        rep.completed_clients, nb, counters,
+                                        executor=rep.executor)
+                if t_abs is not None and fi.upload_lost(
+                        rep.completed_clients, self.t0 + t_c, t_abs):
+                    t_abs = None
+                if t_abs is None:
+                    clock.push(t_c, "upload_lost",
+                               (rep.executor,
+                                tuple(rep.completed_clients)))
+                    return t_c
+                t_arr = t_abs - self.t0
             clock.push(t_arr, "chunk_arrived", CommEvent(
                 executor=rep.executor, partial=wirep, record=record,
                 n_tasks=rep.n_tasks,
@@ -333,6 +367,46 @@ class RoundEngine:
             states[survivors[i % len(survivors)]].queue.append(t)
         return survivors
 
+    def _lifecycle(self, srv, t: float, counters: FaultCounters) -> None:
+        """Fault-plan executor lifecycle at a round boundary: fire crashes
+        that are due at absolute time ``t`` (retiring the executor — its
+        state and pin park until the paired restart), then revive executors
+        whose restart came due (re-pinned least-loaded via the placement).
+        No-op without an active plan."""
+        fi = srv.faults
+        if fi is None:
+            return
+        for k in sorted(srv.executors):
+            if fi.crash_due(k, t) is not None and fi.fire_crash(k, t):
+                srv._drop_executor(k)
+                counters.crashes += 1
+        for k in fi.restarts_due(t):
+            if srv._revive_executor(k):
+                counters.restarts += 1
+        if not srv.executors:
+            raise RuntimeError("all executors failed")
+
+    @staticmethod
+    def _fault_extra(extra: Dict[str, float],
+                     counters: FaultCounters) -> None:
+        """Fold the round's fault accounting into ``extra`` under the
+        unified schema every engine emits: ``retries``,
+        ``corrupt_payloads`` and ``dropped_clients`` are always present
+        (merging with any availability dropouts the netsim counted);
+        lifecycle/timeout/quorum keys appear when they fired."""
+        extra["retries"] = float(counters.retries)
+        extra["corrupt_payloads"] = float(counters.corrupt_payloads)
+        extra["dropped_clients"] = (extra.get("dropped_clients", 0.0)
+                                    + float(counters.dropped_clients))
+        if counters.crashes:
+            extra["fault_crashes"] = float(counters.crashes)
+        if counters.restarts:
+            extra["fault_restarts"] = float(counters.restarts)
+        if counters.timeouts:
+            extra["chunk_timeouts"] = float(counters.timeouts)
+        if counters.quorum_commits:
+            extra["quorum_commits"] = float(counters.quorum_commits)
+
 
 def make_engine(mode: str, **opts) -> RoundEngine:
     modes = {"bsp": BSPEngine, "semi-sync": SemiSyncEngine,
@@ -366,14 +440,38 @@ class BSPEngine(RoundEngine):
     clients predicted to leave before their queue position completes are
     dropped at dispatch (their round contribution is lost, as on a real
     deployment).
+
+    Under an active :class:`FaultPlan` (DESIGN.md §10): crashes due at the
+    round boundary retire the executor before scheduling; a crash inside a
+    queue's computed span discards its report and re-runs the clients on the
+    survivors (the existing failure path); slowdown windows stretch report
+    spans; corrupted partials are detected after the ship and their clients
+    re-run round-robin until the retry budget drains; with a network model
+    the upload leg additionally sees blackouts, chunk timeouts with
+    backed-off re-sends, and mid-upload dropout — a payload whose every
+    re-send is exhausted loses its contribution for the round (BSP has no
+    carry pool to re-enter).  Client dropout otherwise filters at selection
+    only: BSP queues have no mid-round re-entry point.  Re-runs themselves
+    are not fault-checked (one level of recovery per round keeps the
+    barrier analysis tractable).  ``quorum_frac < 1.0`` relaxes the
+    barrier: when executors die but the surviving reports already cover ≥
+    ``quorum_frac`` of the selected weight, the round commits degraded
+    instead of re-running the dead queues' clients.
     """
 
     mode = "bsp"
+
+    def __init__(self, quorum_frac: float = 1.0):
+        if not (0.0 < quorum_frac <= 1.0):
+            raise ValueError("quorum_frac must be in (0, 1]")
+        self.quorum_frac = float(quorum_frac)
 
     def run_round(self, srv):
         from repro.core.round import RoundMetrics
         rnd = srv.round
         t_wall = time.perf_counter()
+        counters = FaultCounters()
+        self._lifecycle(srv, srv.virtual_now, counters)
         if srv._next_tasks is not None:
             tasks, srv._next_tasks = srv._next_tasks, None
         else:
@@ -412,14 +510,18 @@ class BSPEngine(RoundEngine):
             for k, s in drop_map.items():
                 skip_map.setdefault(k, set()).update(s)
         reports, n_failed = self._dispatch(srv, rnd, schedule, payload,
-                                           skip_map, netsim, dropped)
+                                           skip_map, netsim, dropped,
+                                           counters=counters,
+                                           n_total=len(tasks))
 
         # round span — computed before the overlap selection below, which
         # must see the server's virtual clock at this round's END (or the
         # next cohort's availability would be filtered at its start)
+        fi = srv.faults
+        kept = reports
         if netsim is None:
             makespan = max((r.virtual_time for r in reports), default=0.0)
-        else:
+        elif fi is None:
             # the barrier waits on comm events: each executor's span is
             # broadcast-download + compute + partial-upload (the upload at
             # the achieved wire size measured when the partial shipped)
@@ -427,6 +529,37 @@ class BSPEngine(RoundEngine):
                 (netsim.down(r.completed_clients) + r.virtual_time
                  + netsim.up(r.completed_clients, r.wire_bytes)
                  for r in reports), default=0.0)
+        else:
+            # fault-priced upload leg: blackout pauses + chunk timeout with
+            # backed-off re-sends, then mid-upload dropout.  A payload that
+            # never lands loses its round contribution (BSP has no carry
+            # pool) but its compute still gates the barrier.
+            spans: List[float] = []
+            lost: Set[int] = set()
+            for i, r in enumerate(reports):
+                t_c = (netsim.t0 + netsim.down(r.completed_clients)
+                       + r.virtual_time)
+                up_s = netsim.up(r.completed_clients, r.wire_bytes)
+                if not r.n_tasks:
+                    spans.append(t_c + up_s - netsim.t0)
+                    continue
+                t_abs = fi.price_upload(t_c, up_s, netsim,
+                                        r.completed_clients, r.wire_bytes,
+                                        counters, executor=r.executor)
+                if t_abs is not None and fi.upload_lost(
+                        r.completed_clients, t_c, t_abs):
+                    t_abs = None
+                if t_abs is None:
+                    lost.add(i)
+                    counters.dropped_clients += len(r.completed_clients)
+                    spans.append(t_c - netsim.t0)
+                else:
+                    spans.append(t_abs - netsim.t0)
+            makespan = max(spans, default=0.0)
+            if lost:
+                kept = [r for i, r in enumerate(reports) if i not in lost]
+            fi.clear_retries(
+                [c for r in kept for c in r.completed_clients])
         srv.virtual_now += makespan
 
         # overlap: prepare round r+1's schedule "while the reduce is in
@@ -439,12 +572,13 @@ class BSPEngine(RoundEngine):
                 rnd + 1, srv._next_tasks, list(srv.executors),
                 comm_cost=srv._sched_comm_cost())
 
-        partials = [r.partial for r in reports]   # already the wire copies
+        partials = [r.partial for r in kept]      # already the wire copies
         ops = srv.algorithm.ops()
-        agg = srv.global_fold(partials)
-        agg["_n_selected"] = sum(r.n_tasks for r in reports)
-        srv.params, srv.server_state = srv.algorithm.server_update(
-            srv.params, agg, srv.server_state, len(srv.data_by_client))
+        if partials:   # every report lost in transit -> no update this round
+            agg = srv.global_fold(partials)
+            agg["_n_selected"] = sum(r.n_tasks for r in kept)
+            srv.params, srv.server_state = srv.algorithm.server_update(
+                srv.params, agg, srv.server_state, len(srv.data_by_client))
 
         records = [rec for r in reports for rec in r.records]
         err = float("nan")
@@ -463,6 +597,8 @@ class BSPEngine(RoundEngine):
                 idle += self._advance_past_gap(srv)
         if idle:
             extra["idle_time"] = idle
+        if srv.faults is not None or counters.quorum_commits:
+            self._fault_extra(extra, counters)
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,
@@ -515,7 +651,9 @@ class BSPEngine(RoundEngine):
     def _dispatch(self, srv, rnd: int, schedule: Schedule, payload: Dict,
                   skip_map: Optional[Dict[int, Set[int]]] = None,
                   netsim: Optional[_NetSim] = None,
-                  dropped: Optional[Set[int]] = None
+                  dropped: Optional[Set[int]] = None,
+                  counters: Optional[FaultCounters] = None,
+                  n_total: int = 0
                   ) -> Tuple[List[ExecutorReport], int]:
         live = list(srv.executors)
         srv.comm.broadcast(payload, live, tag="broadcast")
@@ -569,6 +707,27 @@ class BSPEngine(RoundEngine):
             else:
                 failed.append(ev.data)
 
+        # ---- fault plan: slowdown windows + crashes inside the span ------
+        fi = srv.faults
+        if fi is not None:
+            t0 = srv.virtual_now
+            surviving: List[ExecutorReport] = []
+            for rep in reports:
+                scale_report(rep, fi.slowdown(rep.executor, t0))
+                hit = (fi.crash_in(rep.executor, t0, t0 + rep.virtual_time)
+                       if rep.n_tasks else None)
+                if hit is not None:
+                    # the executor died mid-queue: its report never reaches
+                    # the server — the clients re-run through the existing
+                    # failure path below
+                    fi.fire_crash(rep.executor, hit[1])
+                    if counters is not None:
+                        counters.crashes += 1
+                    failed.append(rep.executor)
+                else:
+                    surviving.append(rep)
+            reports = surviving
+
         # ---- fault handling: re-run failed queues on the survivors -------
         if failed:
             for rep in reports:
@@ -587,6 +746,18 @@ class BSPEngine(RoundEngine):
                         done_clients.add(t.client)
                         leftovers.append(t)
                 srv._drop_executor(k)          # elastic K shrink
+            # quorum-degraded commit: when the surviving reports already
+            # cover >= quorum_frac of the selected weight, skip the re-runs
+            # and commit with what landed (missing weight renormalizes
+            # through _n_selected; fold order over survivors is unchanged,
+            # hence deterministic)
+            if self.quorum_frac < 1.0 and leftovers \
+                    and counters is not None:
+                folded = sum(r.n_tasks for r in reports)
+                if folded >= self.quorum_frac * max(n_total, 1):
+                    counters.dropped_clients += len(leftovers)
+                    counters.quorum_commits += 1
+                    leftovers = []
             for i, t in enumerate(leftovers):  # round-robin retry placement
                 k = survivors[i % len(survivors)]
                 rep = srv.executors[k].run_queue(
@@ -609,6 +780,34 @@ class BSPEngine(RoundEngine):
                     tag="partial")
                 rep.partial = srv._maybe_decompress(
                     srv.comm.recv_from_executor(rep.executor, tag="partial"))
+
+        # ---- corruption: detect-and-re-run until the retry budget drains -
+        if fi is not None and counters is not None:
+            pending, checked, rr = list(reports), [], 0
+            while pending:
+                rep = pending.pop(0)
+                if rep.n_tasks and fi.take_corrupt(
+                        rep.executor, srv.virtual_now + rep.virtual_time):
+                    counters.corrupt_payloads += 1
+                    retryc, give_up = fi.charge_retry(rep.completed_clients)
+                    counters.retries += len(retryc)
+                    counters.dropped_clients += len(give_up)
+                    live_ks = sorted(srv.executors)
+                    for c in retryc:   # round-robin re-run, re-ship, re-check
+                        k = live_ks[rr % len(live_ks)]
+                        rr += 1
+                        nrep = srv.executors[k].run_queue(
+                            rnd, _tasks_of(srv, [c]), payload,
+                            srv.data_by_client)
+                        if netsim is not None:
+                            nrep.partial, nrep.wire_bytes = netsim.ship(
+                                k, nrep.partial)
+                        else:
+                            nrep.partial = self._wire(srv, k, nrep.partial)
+                        pending.append(nrep)
+                else:
+                    checked.append(rep)
+            reports = checked
         return reports, len(failed)
 
 
@@ -628,15 +827,29 @@ class SemiSyncEngine(RoundEngine):
     dead executor's re-homed tasks that miss the deadline on the survivors —
     carries into the next round's selection pool.  Every executor gets its
     first chunk unconditionally, so a round always makes progress.
+
+    Under an active :class:`FaultPlan` every fault routes through the carry
+    pool (the engine's native re-run path): crashes at dispatch or inside a
+    chunk's span push the executor's failure event; mid-compute dropouts
+    leave the chunk before it runs; corrupted / lost-in-transit partials
+    charge the clients' retry budget and carry the survivors; slowdown
+    windows stretch chunk spans AND the deadline's span predictions.
+    ``quorum_frac < 1.0`` commits the round early once ≥ that fraction of
+    the selected tasks has folded — remaining queues drain into the carry
+    pool and the round's makespan is the commit time.
     """
 
     mode = "semi-sync"
 
     def __init__(self, over_select: float = 1.5, deadline_frac: float = 0.75,
-                 chunk_size: Optional[int] = None):
+                 chunk_size: Optional[int] = None,
+                 quorum_frac: float = 1.0):
+        if not (0.0 < quorum_frac <= 1.0):
+            raise ValueError("quorum_frac must be in (0, 1]")
         self.over_select = float(over_select)
         self.deadline_frac = float(deadline_frac)
         self.chunk_size = chunk_size
+        self.quorum_frac = float(quorum_frac)
         self._carry: List[ClientTask] = []
 
     # -- checkpointing: the carry pool is the only cross-round state -------
@@ -655,6 +868,9 @@ class SemiSyncEngine(RoundEngine):
         from repro.core.round import RoundMetrics
         rnd = srv.round
         t_wall = time.perf_counter()
+        counters = FaultCounters()
+        self._lifecycle(srv, srv.virtual_now, counters)
+        fi = srv.faults
         netsim = self._netsim(srv, srv.virtual_now)
 
         target = max(1, math.ceil(self.over_select * srv.clients_per_round))
@@ -691,6 +907,9 @@ class SemiSyncEngine(RoundEngine):
 
         models = dict(srv.estimator.last_fit)
         chunk = self._chunk_size(srv, self.chunk_size)
+        # the round's anchor on the server's absolute virtual axis (fault
+        # windows are declared in absolute time; local event times add abs0)
+        abs0 = srv.virtual_now
         # the deadline lives in the same units the executors accrue: the
         # chunk-granular predicted makespan of this schedule (the per-task
         # Eq.-4 prediction pays one offset b per *task* and would overshoot
@@ -698,8 +917,10 @@ class SemiSyncEngine(RoundEngine):
         # unreachable).  Comm delay joins the prediction when priced.
         # No models yet (warmup) -> ∞ -> a full BSP round.
         comm_pred = netsim.comm_pred if netsim is not None else None
-        pm = max((predict_remaining(models.get(k), schedule.queue(k), chunk,
-                                    comm_pred)
+        pm = max((predict_remaining(
+                      models.get(k) if fi is None
+                      else fi.scaled_model(models.get(k), k, abs0),
+                      schedule.queue(k), chunk, comm_pred)
                   for k in live), default=0.0)
         deadline = self.deadline_frac * pm if pm > 0.0 else float("inf")
 
@@ -709,10 +930,12 @@ class SemiSyncEngine(RoundEngine):
         records: List[RunRecord] = []
         n_landed = 0
         n_failed = 0
+        committed = False       # quorum reached: queues drained to carry
+        quorum_t = 0.0
         t_hi = 0.0              # latest processed event (network makespan)
         for k in live:
             self._dispatch_next(srv, rnd, k, states, clock, payload, models,
-                                deadline, chunk, netsim)
+                                deadline, chunk, netsim, counters)
         while clock:
             ev = clock.pop()
             t_hi = max(t_hi, ev.time)
@@ -721,20 +944,57 @@ class SemiSyncEngine(RoundEngine):
                 es = states[k]
                 es.t, es.inflight = ev.time, False
                 if netsim is None and rep.n_tasks:
-                    partials.append(self._wire(srv, k, rep.partial))
-                    rec = self._chunk_record(srv, rnd, rep)
-                    if rec is not None:
-                        records.append(rec)
-                    n_landed += rep.n_tasks
+                    if committed:
+                        # landed after the quorum commit: carry, not fold
+                        self._carry.extend(
+                            _tasks_of(srv, rep.completed_clients))
+                    elif fi is not None and fi.take_corrupt(
+                            k, abs0 + ev.time):
+                        counters.corrupt_payloads += 1
+                        retryc, give_up = fi.charge_retry(
+                            rep.completed_clients)
+                        counters.retries += len(retryc)
+                        counters.dropped_clients += len(give_up)
+                        self._carry.extend(_tasks_of(srv, retryc))
+                    else:
+                        partials.append(self._wire(srv, k, rep.partial))
+                        rec = self._chunk_record(srv, rnd, rep)
+                        if rec is not None:
+                            records.append(rec)
+                        n_landed += rep.n_tasks
+                        if fi is not None:
+                            fi.clear_retries(rep.completed_clients)
                 self._dispatch_next(srv, rnd, k, states, clock, payload,
-                                    models, deadline, chunk, netsim)
+                                    models, deadline, chunk, netsim,
+                                    counters)
             elif ev.kind == "chunk_arrived":
                 # the chunk's upload landed: fold the wire copy it carried
                 ce = ev.data
-                partials.append(ce.partial)
-                if ce.record is not None:
-                    records.append(ce.record)
-                n_landed += ce.n_tasks
+                if committed:
+                    self._carry.extend(_tasks_of(srv, ce.completed_clients))
+                elif fi is not None and fi.take_corrupt(
+                        ce.executor, abs0 + ev.time):
+                    counters.corrupt_payloads += 1
+                    retryc, give_up = fi.charge_retry(ce.completed_clients)
+                    counters.retries += len(retryc)
+                    counters.dropped_clients += len(give_up)
+                    self._carry.extend(_tasks_of(srv, retryc))
+                else:
+                    partials.append(ce.partial)
+                    if ce.record is not None:
+                        records.append(ce.record)
+                    n_landed += ce.n_tasks
+                    if fi is not None:
+                        fi.clear_retries(ce.completed_clients)
+            elif ev.kind == "upload_lost":
+                # every re-send timed out, or a client dropped mid-upload:
+                # the partial never reached the server — charge the budget,
+                # carry the clients that may retry
+                _k, lost_clients = ev.data
+                retryc, give_up = fi.charge_retry(lost_clients)
+                counters.retries += len(retryc)
+                counters.dropped_clients += len(give_up)
+                self._carry.extend(_tasks_of(srv, retryc))
             else:  # executor_failed
                 dead, remaining = ev.data
                 n_failed += 1
@@ -748,7 +1008,19 @@ class SemiSyncEngine(RoundEngine):
                     elif not states[j].inflight:  # wake finished survivors
                         self._dispatch_next(srv, rnd, j, states, clock,
                                             payload, models, deadline, chunk,
-                                            netsim)
+                                            netsim, counters)
+            if not committed and self.quorum_frac < 1.0 and tasks \
+                    and n_landed >= self.quorum_frac * len(tasks):
+                # quorum-degraded commit: enough of the selected weight has
+                # folded — the round closes here; everything still queued
+                # (or landing later) re-enters through the carry pool
+                committed, quorum_t = True, ev.time
+                counters.quorum_commits += 1
+                for es in states.values():
+                    if es.queue:
+                        self._carry.extend(es.queue)
+                        es.queue = []
+                    es.stopped = True
 
         ops = srv.algorithm.ops()
         if partials:
@@ -766,6 +1038,10 @@ class SemiSyncEngine(RoundEngine):
         if netsim is not None:
             # the round is not over until the last counted upload landed
             makespan = max(makespan, t_hi)
+        if committed:
+            # the round committed at quorum: in-flight stragglers finished
+            # after the commit carried over instead of counting
+            makespan = quorum_t
         stats = srv.comm.stats.reset()
         extra = {"landed_clients": float(n_landed),
                  "carried_tasks": float(len(self._carry)),
@@ -776,6 +1052,8 @@ class SemiSyncEngine(RoundEngine):
                 idle += self._advance_past_gap(srv)
         if idle:
             extra["idle_time"] = idle
+        if fi is not None or counters.quorum_commits:
+            self._fault_extra(extra, counters)
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,
@@ -795,13 +1073,18 @@ class SemiSyncEngine(RoundEngine):
 
     # ------------------------------------------------------------------
     def _dispatch_next(self, srv, rnd, k, states, clock, payload, models,
-                       deadline, chunk, netsim=None) -> None:
+                       deadline, chunk, netsim=None, counters=None) -> None:
+        fi = srv.faults
+        abs0 = netsim.t0 if netsim is not None else srv.virtual_now
         es = states[k]
         while es.queue and not es.stopped and not es.dead:
             next_chunk = es.queue[:chunk]
-            comm_pred = netsim.comm_pred if netsim is not None else None
-            pred = predict_span(models.get(k), next_chunk, comm_pred)
             start = max(es.t, clock.now)
+            comm_pred = netsim.comm_pred if netsim is not None else None
+            model = models.get(k)
+            if fi is not None:
+                model = fi.scaled_model(model, k, abs0 + start)
+            pred = predict_span(model, next_chunk, comm_pred)
             if es.t > 0.0 and start + pred > deadline:
                 # predicted to miss the deadline: stop here, carry the rest
                 # (first chunk is exempt — a round always makes progress)
@@ -810,6 +1093,28 @@ class SemiSyncEngine(RoundEngine):
                 es.queue = []
                 return
             es.queue = es.queue[chunk:]
+            if fi is not None:
+                if fi.crash_due(k, abs0 + start) is not None:
+                    # crash due before this chunk dispatches: the executor
+                    # is dead now, the chunk and queue re-home
+                    fi.fire_crash(k, abs0 + start)
+                    if counters is not None:
+                        counters.crashes += 1
+                    clock.push(start, "executor_failed",
+                               (k, next_chunk + es.queue))
+                    es.queue = []
+                    es.dead = True
+                    return
+                # mid-compute dropout: clients whose window opens inside
+                # the predicted span leave the chunk and carry over
+                next_chunk, f_drop = fi.split_up(next_chunk, abs0 + start,
+                                                 pred)
+                if f_drop:
+                    if counters is not None:
+                        counters.dropped_clients += len(f_drop)
+                    self._carry.extend(f_drop)
+                if not next_chunk:
+                    continue        # whole chunk dropped: try the next one
             if netsim is not None:
                 # availability dropout: offline / predicted-to-expire
                 # clients leave the chunk and re-enter through the carry
@@ -835,6 +1140,29 @@ class SemiSyncEngine(RoundEngine):
                 return
             es.offset += len(next_chunk)
             es.inflight = True
+            if fi is not None:
+                scale_report(rep, fi.slowdown(k, abs0 + start))
+                # crash inside the chunk's span (download + compute; the
+                # download read off the network model UNACCOUNTED — the
+                # real billing happens in push_chunk, this is a window
+                # bound): the chunk is lost, the queue re-homes at the
+                # crash time
+                down_un = 0.0
+                if netsim is not None and netsim.net is not None \
+                        and rep.n_tasks:
+                    down_un = netsim.net.download_time(
+                        rep.completed_clients, netsim.payload_nbytes)
+                hit = fi.crash_in(k, abs0 + start,
+                                  abs0 + start + down_un + rep.virtual_time)
+                if hit is not None:
+                    fi.fire_crash(k, hit[1])
+                    if counters is not None:
+                        counters.crashes += 1
+                    clock.push(hit[1] - abs0, "executor_failed",
+                               (k, next_chunk + es.queue))
+                    es.queue = []
+                    es.dead = True
+                    return
             if netsim is None:
                 es.busy_until = start + rep.virtual_time
                 clock.push(es.busy_until, "chunk_done", (k, rep))
@@ -844,7 +1172,8 @@ class SemiSyncEngine(RoundEngine):
             # lands as its own arrival event, which is when the fold counts
             es.busy_until = netsim.push_chunk(
                 clock, rep, start, (k, rep),
-                self._chunk_record(srv, rnd, rep), version=rnd)
+                self._chunk_record(srv, rnd, rep), version=rnd,
+                fi=fi, counters=counters)
             return
 
 
@@ -894,6 +1223,7 @@ class AsyncEngine(RoundEngine):
         self._steals = 0
         self._stale_folds = 0
         self._stale_sum = 0.0
+        self._counters = FaultCounters()
 
     # -- checkpointing of the in-flight pipeline ---------------------------
     # The engine persists across rounds, so a checkpoint taken at an update
@@ -942,6 +1272,7 @@ class AsyncEngine(RoundEngine):
             "steals": self._steals,
             "stale_folds": self._stale_folds,
             "stale_sum": self._stale_sum,
+            "counters": vars(self._counters).copy(),
             "last_sched": self._last_sched,
         }
 
@@ -966,6 +1297,7 @@ class AsyncEngine(RoundEngine):
         self._steals = state["steals"]
         self._stale_folds = state["stale_folds"]
         self._stale_sum = state["stale_sum"]
+        self._counters = FaultCounters(**state.get("counters", {}))
         self._last_sched = state["last_sched"]
 
     # ------------------------------------------------------------------
@@ -1019,6 +1351,7 @@ class AsyncEngine(RoundEngine):
         es = self._states[k]
         if es.dead:
             return
+        fi = srv.faults    # async clock is absolute: fault times are local
         chunk = self._chunk_size(srv, self.chunk_size)
         comm_pred = netsim.comm_pred if netsim is not None else None
         while True:
@@ -1039,12 +1372,35 @@ class AsyncEngine(RoundEngine):
                 self._steals += 1
             tasks, es.queue = es.queue[:chunk], es.queue[chunk:]
             start = max(es.t, self._clock.now)
+            if fi is not None and fi.crash_due(k, start) is not None:
+                # crash due before this chunk dispatches: dead now, the
+                # chunk and queue re-home through the failure event
+                fi.fire_crash(k, start)
+                self._counters.crashes += 1
+                self._clock.push(start, "executor_failed",
+                                 (k, tasks + es.queue))
+                es.queue = []
+                es.dead = True
+                return
+            if netsim is not None or fi is not None:
+                model = srv.estimator.last_fit.get(k)
+                if fi is not None:
+                    model = fi.scaled_model(model, k, start)
+                pred = predict_span(model, tasks, comm_pred)
+            if fi is not None:
+                # mid-compute dropout: dropped clients leave the system so
+                # a later refill can re-select them once their window ends
+                tasks, f_drop = fi.split_up(tasks, start, pred)
+                if f_drop:
+                    self._counters.dropped_clients += len(f_drop)
+                    self._in_system.difference_update(
+                        t.client for t in f_drop)
+                if not tasks:
+                    continue      # whole chunk dropped: try the next one
             if netsim is not None:
                 # availability dropout: dropped clients leave the system so
                 # a later refill can re-select them once they're back — the
                 # async re-run path
-                pred = predict_span(srv.estimator.last_fit.get(k), tasks,
-                                    comm_pred)
                 tasks, av_dropped = netsim.split_available(tasks, start,
                                                            pred)
                 self._in_system.difference_update(
@@ -1064,6 +1420,25 @@ class AsyncEngine(RoundEngine):
                 return
             es.offset += len(tasks)
             es.inflight = True
+            if fi is not None:
+                scale_report(rep, fi.slowdown(k, start))
+                down_un = 0.0   # unaccounted read: push_chunk does billing
+                if netsim is not None and netsim.net is not None \
+                        and rep.n_tasks:
+                    down_un = netsim.net.download_time(
+                        rep.completed_clients, netsim.payload_nbytes)
+                hit = fi.crash_in(k, start,
+                                  start + down_un + rep.virtual_time)
+                if hit is not None:
+                    # died inside the chunk's span: chunk lost, queue
+                    # re-homes at the crash time
+                    fi.fire_crash(k, hit[1])
+                    self._counters.crashes += 1
+                    self._clock.push(hit[1], "executor_failed",
+                                     (k, tasks + es.queue))
+                    es.queue = []
+                    es.dead = True
+                    return
             if netsim is None:
                 es.busy_until = start + rep.virtual_time
                 self._clock.push(es.busy_until, "chunk_done", (k, rep, rnd))
@@ -1073,7 +1448,8 @@ class AsyncEngine(RoundEngine):
             # (staleness then counts server updates across the comm delay)
             es.busy_until = netsim.push_chunk(
                 self._clock, rep, start, (k, rep, rnd),
-                self._chunk_record(srv, rnd, rep), version=rnd)
+                self._chunk_record(srv, rnd, rep), version=rnd,
+                fi=fi, counters=self._counters)
             return
 
     # ------------------------------------------------------------------
@@ -1086,6 +1462,16 @@ class AsyncEngine(RoundEngine):
         if self._pricer is None:
             self._pricer = self._netsim(srv, 0.0)
         netsim = self._pricer
+        # fault lifecycle at the window boundary: revive executors whose
+        # restart came due (crashes fire at dispatch granularity inside
+        # _dispatch_next — the async clock never jumps a round at a time)
+        fi = srv.faults
+        if fi is not None:
+            for k in fi.restarts_due(self._clock.now):
+                if srv._revive_executor(k):
+                    self._counters.restarts += 1
+                    if self._states is not None:
+                        self._states[k] = _ExecState(t=self._clock.now)
         self._ensure_init(srv, netsim)
         rnd = srv.round
         goal = self.goal or srv.clients_per_round
@@ -1134,35 +1520,71 @@ class AsyncEngine(RoundEngine):
                 es = self._states[k]
                 es.t, es.inflight = ev.time, False
                 if netsim is None and rep.n_tasks:
-                    wire = self._wire(srv, k, rep.partial)
-                    s = srv.round - version
-                    gamma = staleness_weight(s, self.staleness_lambda)
-                    self._buffer = merge_partials(self._buffer,
-                                                  scale_partial(wire, gamma))
-                    self._n_folded += rep.n_tasks
-                    if s > 0:
-                        self._stale_folds += 1
-                    self._stale_sum += s
-                    rec = self._chunk_record(srv, version, rep)
-                    if rec is not None:
-                        self._records.append(rec)
-                    self._in_system.difference_update(rep.completed_clients)
+                    if fi is not None and fi.take_corrupt(k, ev.time):
+                        # corrupted partial: discard; clients with retry
+                        # budget left leave the system so the next refill
+                        # re-selects them (the async re-run path)
+                        self._counters.corrupt_payloads += 1
+                        retryc, give_up = fi.charge_retry(
+                            rep.completed_clients)
+                        self._counters.retries += len(retryc)
+                        self._counters.dropped_clients += len(give_up)
+                        fi.clear_retries(give_up)
+                        self._in_system.difference_update(
+                            rep.completed_clients)
+                    else:
+                        wire = self._wire(srv, k, rep.partial)
+                        s = srv.round - version
+                        gamma = staleness_weight(s, self.staleness_lambda)
+                        self._buffer = merge_partials(
+                            self._buffer, scale_partial(wire, gamma))
+                        self._n_folded += rep.n_tasks
+                        if s > 0:
+                            self._stale_folds += 1
+                        self._stale_sum += s
+                        rec = self._chunk_record(srv, version, rep)
+                        if rec is not None:
+                            self._records.append(rec)
+                        self._in_system.difference_update(
+                            rep.completed_clients)
+                        if fi is not None:
+                            fi.clear_retries(rep.completed_clients)
                 self._dispatch_next(srv, k, netsim)
             elif ev.kind == "chunk_arrived":
                 # the upload landed: fold it, discounted by the staleness
                 # accrued across compute AND comm delay
                 ce = ev.data
-                s = srv.round - ce.version
-                gamma = staleness_weight(s, self.staleness_lambda)
-                self._buffer = merge_partials(
-                    self._buffer, scale_partial(ce.partial, gamma))
-                self._n_folded += ce.n_tasks
-                if s > 0:
-                    self._stale_folds += 1
-                self._stale_sum += s
-                if ce.record is not None:
-                    self._records.append(ce.record)
-                self._in_system.difference_update(ce.completed_clients)
+                if fi is not None and fi.take_corrupt(ce.executor, ev.time):
+                    self._counters.corrupt_payloads += 1
+                    retryc, give_up = fi.charge_retry(ce.completed_clients)
+                    self._counters.retries += len(retryc)
+                    self._counters.dropped_clients += len(give_up)
+                    fi.clear_retries(give_up)
+                    self._in_system.difference_update(ce.completed_clients)
+                else:
+                    s = srv.round - ce.version
+                    gamma = staleness_weight(s, self.staleness_lambda)
+                    self._buffer = merge_partials(
+                        self._buffer, scale_partial(ce.partial, gamma))
+                    self._n_folded += ce.n_tasks
+                    if s > 0:
+                        self._stale_folds += 1
+                    self._stale_sum += s
+                    if ce.record is not None:
+                        self._records.append(ce.record)
+                    self._in_system.difference_update(ce.completed_clients)
+                    if fi is not None:
+                        fi.clear_retries(ce.completed_clients)
+            elif ev.kind == "upload_lost":
+                # every re-send timed out, or a client dropped mid-upload:
+                # charge the budget and release the clients so a later
+                # refill can re-select the retryable ones
+                _k, lost_clients = ev.data
+                retryc, give_up = fi.charge_retry(lost_clients)
+                self._counters.retries += len(retryc)
+                self._counters.dropped_clients += len(give_up)
+                fi.clear_retries(give_up)
+                self._in_system.difference_update(lost_clients)
             elif ev.kind == "wake":
                 self._refill(srv)
                 for k in list(self._states):
@@ -1204,6 +1626,8 @@ class AsyncEngine(RoundEngine):
             # tail dispatches below happen after this window's metrics were
             # read: their comm bills the NEXT window on the shared pricer
             netsim.reset_counters()
+        if fi is not None:
+            self._fault_extra(extra, self._counters)
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,

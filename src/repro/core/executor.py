@@ -182,8 +182,19 @@ class SequentialExecutor:
         # every round
         self._sig_cache: Dict[int, Tuple[Any, Any]] = {}
         # fault-injection hook for the fault-tolerance tests:
-        # (round, task_index) at which this executor dies.
+        # (round, task_index) at which this executor dies.  Round -1 is a
+        # wildcard (any round); see ``fail_pending``.  Scheduled fault plans
+        # (core/faults.py) are the first-class path — this remains the
+        # task-index-granular escape hatch.
         self.fail_at = fail_at
+
+    def fail_pending(self, rnd: int) -> bool:
+        """A ``fail_at`` injection is armed for round ``rnd`` (round -1
+        wildcards to every round).  The single definition of the wildcard —
+        ``run_queue``'s eager-path switch and the gang-dispatch eligibility
+        check must agree, or a gang wave could run a round the injection
+        was due to interrupt at task granularity."""
+        return self.fail_at is not None and self.fail_at[0] in (rnd, -1)
 
     # ------------------------------------------------------------- device
     def set_device(self, device: Optional[Any]) -> None:
@@ -324,8 +335,7 @@ class SequentialExecutor:
         # runs the eager per-task loop so the index semantics stay exact
         # (round -1 is a wildcard: fire at that dispatch index in any round
         # — the async engine's dispatch stream spans update boundaries)
-        if self.use_compiled_steps and not (
-                self.fail_at is not None and self.fail_at[0] in (rnd, -1)):
+        if self.use_compiled_steps and not self.fail_pending(rnd):
             vtime = self._run_blocked(rnd, tasks, payload, data_by_client,
                                       skip_clients, agg, records, completed,
                                       eta)
@@ -373,8 +383,11 @@ class SequentialExecutor:
         vtime = 0.0
         for i, task in enumerate(tasks, start=task_offset):
             if self.fail_at is not None and self.fail_at[1] == i \
-                    and self.fail_at[0] in (rnd, -1):
-                raise ExecutorFailure(self.id, rnd, i)
+                    and self.fail_pending(rnd):
+                raise ExecutorFailure(
+                    self.id, rnd, i, device=self.device,
+                    chunk=(task_offset, task_offset + len(tasks)),
+                    vtime=vtime)
             if skip_clients and task.client in skip_clients:
                 continue  # result already produced by a backup replica
             t0 = self.timer()
@@ -595,8 +608,7 @@ def run_queues_ganged(executors: Dict[int, "SequentialExecutor"], rnd: int,
     timer = exs[0].timer
     for ex in exs:
         if (not ex.use_compiled_steps or ex.algorithm is not algo
-                or ex.timer is not timer
-                or (ex.fail_at is not None and ex.fail_at[0] in (rnd, -1))):
+                or ex.timer is not timer or ex.fail_pending(rnd)):
             # gang waves are timed once on the shared timer; executors with
             # private timers keep per-executor measurement semantics via
             # the fallback path
@@ -710,9 +722,40 @@ def run_queues_ganged(executors: Dict[int, "SequentialExecutor"], rnd: int,
 
 
 class ExecutorFailure(RuntimeError):
-    def __init__(self, executor: int, rnd: int, task_index: int):
-        super().__init__(f"executor {executor} failed at round {rnd}, "
-                         f"task {task_index}")
+    """An executor died mid-dispatch.
+
+    Carries where (device), what was in flight (the chunk's global task
+    range) and when (virtual seconds into the chunk's span) — and pickles
+    round-trip cleanly (``__reduce__``), so an in-flight failure can ride a
+    checkpoint blob across process boundaries."""
+
+    def __init__(self, executor: int, rnd: int, task_index: int,
+                 device: Optional[Any] = None,
+                 chunk: Optional[Tuple[int, int]] = None,
+                 vtime: Optional[float] = None):
+        # keep only the plain device id: jax Device objects don't pickle
+        device = getattr(device, "id", device)
+        msg = f"executor {executor} failed at round {rnd}, task {task_index}"
+        detail = []
+        if device is not None:
+            detail.append(f"device={device}")
+        if chunk is not None:
+            detail.append(f"chunk=[{chunk[0]},{chunk[1]})")
+        if vtime is not None:
+            detail.append(f"t={vtime:.6g}s")
+        if detail:
+            msg += " (" + ", ".join(detail) + ")"
+        super().__init__(msg)
         self.executor = executor
         self.rnd = rnd
         self.task_index = task_index
+        self.device = device
+        self.chunk = chunk
+        self.vtime = vtime
+
+    def __reduce__(self):
+        # RuntimeError's default reduce would replay __init__ with the
+        # formatted message as the sole argument; rebuild from fields so
+        # pickle.loads(pickle.dumps(e)) preserves every attribute
+        return (type(self), (self.executor, self.rnd, self.task_index,
+                             self.device, self.chunk, self.vtime))

@@ -143,6 +143,22 @@ class DevicePlacement:
         self._map.pop(executor, None)
         self._mesh_cache = None
 
+    def pin(self, executor: int) -> Any:
+        """Pin a (re)joining executor to the least-loaded live device
+        (ties break on placement order — deterministic, so a crashed
+        executor's restart re-pin is reproducible on resume).  Returns the
+        chosen device; the caller pushes it into the executor via
+        ``SequentialExecutor.set_device``."""
+        if not self._devices:
+            raise RuntimeError("no live devices to pin onto")
+        load = {d.id: 0 for d in self._devices}
+        for d in self._map.values():
+            load[d.id] = load.get(d.id, 0) + 1
+        dev = min(self._devices, key=lambda d: load[d.id])
+        self._map[executor] = dev
+        self._mesh_cache = None
+        return dev
+
     def fail_device(self, device: Any) -> List[int]:
         """A device died: re-pin its executors round-robin onto the live
         devices.  Returns the re-pinned executor ids (the caller must push

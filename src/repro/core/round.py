@@ -43,6 +43,7 @@ from repro.comm.local import LocalComm
 from repro.core.aggregation import flat_aggregate, global_aggregate
 from repro.core.algorithms import ClientData, FLAlgorithm
 from repro.core.executor import SequentialExecutor
+from repro.core.faults import FaultInjector, FaultPlan, RetryPolicy
 from repro.core.network import ClientAvailability, NetworkModel
 from repro.core.placement import DevicePlacement
 from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
@@ -87,6 +88,8 @@ class ParrotServer:
                  gang_dispatch: bool = True,
                  network: Optional[NetworkModel] = None,
                  availability: Optional[ClientAvailability] = None,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None,
                  seed: int = 0):
         from repro.core.engine import make_engine
         self.params = params
@@ -122,6 +125,17 @@ class ParrotServer:
         # code path bit-exactly — params AND makespan histories unchanged
         self.network = network
         self.availability = availability
+        # fault injection (DESIGN.md §10): a seeded FaultPlan schedules
+        # crashes / restarts / dropouts / corruption / blackouts / slowdowns
+        # on the virtual axis; None (the default) keeps every engine on its
+        # pre-fault code path bit-exactly.  An empty plan behaves
+        # identically to None (pinned by the equivalence tests).
+        self.faults: Optional[FaultInjector] = (
+            FaultInjector(faults, retry) if faults is not None
+            or retry is not None else None)
+        # crashed executors park here so a scheduled restart (or a
+        # checkpoint restore of a pre-crash topology) can revive them
+        self._retired: Dict[int, SequentialExecutor] = {}
         # cumulative simulated time across rounds — the availability axis
         # (BSP / semi-sync advance it by each round's makespan; async pins
         # it to its persistent clock)
@@ -166,6 +180,9 @@ class ParrotServer:
         if self.availability is not None:
             pool = [c for c in pool
                     if self.availability.available(c, self.virtual_now)]
+        if self.faults is not None:
+            pool = [c for c in pool
+                    if not self.faults.client_down(c, self.virtual_now)]
         size = min(self.clients_per_round if n is None else n, len(pool))
         if size <= 0:
             return []
@@ -217,10 +234,27 @@ class ParrotServer:
         return global_aggregate(partials, ops)
 
     def _drop_executor(self, k: int) -> None:
-        """Elastic K shrink: forget a dead executor (and its device pin)."""
-        self.executors.pop(k, None)
+        """Elastic K shrink: retire a dead executor (and release its device
+        pin).  The object parks in ``_retired`` so a scheduled restart can
+        rejoin it later — its measured block costs survive the outage."""
+        ex = self.executors.pop(k, None)
+        if ex is not None:
+            self._retired[k] = ex
         if self.placement is not None:
             self.placement.release(k)
+
+    def _revive_executor(self, k: int) -> bool:
+        """A crashed executor rejoins (restart fault event / restore of a
+        pre-crash topology): re-pin it through the placement's deterministic
+        least-loaded choice and put it back in the live set.  Subsequent
+        schedules see K grow again.  False if ``k`` is not revivable."""
+        ex = self._retired.pop(k, None)
+        if ex is None or k in self.executors:
+            return False
+        if self.placement is not None:
+            ex.set_device(self.placement.pin(k))
+        self.executors[k] = ex
+        return True
 
     # ------------------------------------------------------------------
     # network/availability plumbing (no-ops when both are None)
@@ -291,8 +325,25 @@ class ParrotServer:
         window (see ``core/engine.py``)."""
         return self.engine.run_round(self)
 
-    def run(self, n_rounds: int) -> List[RoundMetrics]:
-        return [self.run_round() for _ in range(n_rounds)]
+    def run(self, n_rounds: int,
+            auto_resume: bool = False) -> List[RoundMetrics]:
+        """Run rounds.  With ``auto_resume=True``, first restore the newest
+        valid checkpoint (walking past torn/corrupt ones) and then run until
+        ``n_rounds`` TOTAL rounds have completed — the crash-recovery entry
+        point: after a mid-round kill, a fresh server constructed with the
+        same configuration resumes from the last durable round boundary and
+        replays deterministically (params digest matches the uninterrupted
+        run).  Without it, behaviour is unchanged: ``n_rounds`` more rounds
+        from wherever the server stands."""
+        if not auto_resume:
+            return [self.run_round() for _ in range(n_rounds)]
+        if self.checkpoint_manager is None:
+            raise ValueError("auto_resume needs a checkpoint_manager")
+        from repro.checkpoint.manager import restore_latest
+        restore_latest(self, self.checkpoint_manager.directory)
+        while self.round < n_rounds:
+            self.run_round()
+        return list(self.history[:n_rounds])
 
 
 def run_flat_reference(params, algorithm: FLAlgorithm,

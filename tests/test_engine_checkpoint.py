@@ -1,7 +1,9 @@
 """Round-engine in-flight checkpointing (DESIGN.md §7): the async engine's
 pipeline (queues, clock events with in-flight chunk partials, staleness
 versions, per-queue offsets, fold buffer) and the semi-sync carry pool
-round-trip through ``checkpoint/manager.py`` and resume bit-exactly.
+round-trip through ``checkpoint/manager.py`` and resume bit-exactly —
+including crash-consistent auto-resume after a mid-round kill under an
+active fault plan (DESIGN.md §10).
 """
 import os
 import tempfile
@@ -11,9 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
-from repro.core import (ClientStateManager, ParrotServer, SequentialExecutor,
-                        TickTimer, make_algorithm)
+from repro.checkpoint.manager import CheckpointManager, params_digest
+from repro.core import (ClientStateManager, FaultPlan, ParrotServer,
+                        RetryPolicy, SequentialExecutor, TickTimer,
+                        make_algorithm)
 from repro.data import make_classification_clients
 
 
@@ -112,3 +115,87 @@ def test_bsp_engine_state_is_none_and_restores():
     srv = _build("bsp")
     assert srv.engine.state_dict() is None
     srv.engine.load_state_dict(None)        # no-op
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent auto-resume (DESIGN.md §10): kill the process mid-round
+# under an active fault plan, then ``run(N, auto_resume=True)`` on a fresh
+# server must land on the uninterrupted run's exact params
+# ---------------------------------------------------------------------------
+
+def _fault_loss(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+FAULT_GRAD = jax.jit(jax.value_and_grad(_fault_loss))
+FAULT_PARAMS = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+# run_queue call counts (on executor 0) at which the kill lands mid-round
+# for each engine's dispatch cadence — chosen so the interrupt fires well
+# inside the 8-round run, after at least one durable checkpoint
+_KILL_AFTER = {"bsp": 4, "semi-sync": 14, "async": 11}
+
+
+def _fault_build(engine, ckpt_dir):
+    data = make_classification_clients(30, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10,
+                                       seed=1)
+    algo = make_algorithm("fedavg", grad_fn=FAULT_GRAD, lr=0.1,
+                          local_steps=2)
+    sm = ClientStateManager(tempfile.mkdtemp(prefix="faultckpt_"))
+    execs = [SequentialExecutor(k, algo, state_manager=sm,
+                                speed_model=lambda kk, r: 0.0,
+                                timer=TickTimer(1.0)) for k in range(3)]
+    plan = FaultPlan.random(seed=3, horizon=80.0, executors=[0, 1, 2],
+                            clients=list(range(30)),
+                            crash_rate=0.05, restart_delay=5.0,
+                            dropout_rate=0.1, dropout_duration=4.0,
+                            corrupt_rate=0.05,
+                            slowdown_rate=0.03, slowdown_duration=6.0)
+    opts = {"chunk_size": 2} if engine != "bsp" else None
+    return ParrotServer(params=FAULT_PARAMS, algorithm=algo,
+                        executors=execs, data_by_client=data,
+                        clients_per_round=8, seed=7, round_engine=engine,
+                        engine_opts=opts, faults=plan,
+                        retry=RetryPolicy(max_retries=2),
+                        checkpoint_manager=CheckpointManager(
+                            ckpt_dir, every_rounds=1, keep=10))
+
+
+@pytest.mark.parametrize("engine", ["bsp", "semi-sync", "async"])
+def test_kill_mid_round_then_auto_resume_is_bit_exact(engine, tmp_path):
+    N = 8
+    # uninterrupted reference (its checkpoints are never read back)
+    ref = _fault_build(engine, str(tmp_path / "ref"))
+    ref.run(N)
+    want = params_digest(ref.params)
+
+    # same run, killed mid-round: executor 0's run_queue raises
+    # KeyboardInterrupt partway through a round, after some durable
+    # checkpoints exist — exactly a process kill between fsyncs
+    d = str(tmp_path / "ck")
+    victim = _fault_build(engine, d)
+    ex0 = victim.executors[0]
+    real, calls = ex0.run_queue, [0]
+
+    def dying(*a, **kw):
+        calls[0] += 1
+        if calls[0] >= _KILL_AFTER[engine]:
+            raise KeyboardInterrupt
+        return real(*a, **kw)
+
+    ex0.run_queue = dying
+    with pytest.raises(KeyboardInterrupt):
+        victim.run(N)
+    assert 1 <= victim.round < N        # the kill landed mid-run
+
+    # fresh process: a NEW server over the same config auto-resumes from
+    # the last durable round boundary and replays the rest
+    resumed = _fault_build(engine, d)
+    resumed.run(N, auto_resume=True)
+    assert resumed.round == N
+    assert params_digest(resumed.params) == want
+    assert len(resumed.history) == N

@@ -1,0 +1,401 @@
+"""Fault-injection & recovery tests (DESIGN.md §10).
+
+Two anchors:
+
+* **Neutrality** — ``faults=None`` takes the pre-fault code paths verbatim,
+  and an EMPTY plan must behave identically (params AND makespan history):
+  the injector may be consulted, but consulting it must not move a float.
+* **Determinism under chaos** — a seeded :class:`FaultPlan` drives crashes,
+  restarts, dropouts, corruption, blackouts and slowdowns through all three
+  engines, and two runs of the same plan produce bit-identical params
+  (digest equality) without livelock.
+
+Around the anchors: the injector's pure query logic (blackout-paused
+transfers, timeout/backoff pricing, retry budgets, one-shot consumption),
+quorum-degraded commits, chunk timeout accounting, checkpoint corruption
+detection, the ``ExecutorFailure`` pickle contract, and the
+``fail_at=(-1, i)`` wildcard's run_queue/gang-dispatch consistency.
+"""
+import math
+import os
+import pickle
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointManager, params_digest,
+                                      restore_latest)
+from repro.core import (ClientStateManager, NetworkModel, ParrotServer,
+                        SequentialExecutor, TickTimer, make_algorithm)
+from repro.core.executor import ExecutorFailure
+from repro.core.faults import (BLACKOUT, CORRUPT, CRASH, DROPOUT, RESTART,
+                               SLOWDOWN, FaultEvent, FaultInjector,
+                               FaultPlan, RetryPolicy)
+from repro.core.scheduler import ClientTask, WorkloadModel
+from repro.data import make_classification_clients
+
+
+# ---------------------------------------------------------------------------
+# plan / injector unit tests (no jax compute)
+# ---------------------------------------------------------------------------
+
+def test_plan_validates_and_sorts():
+    with pytest.raises(ValueError):
+        FaultEvent(time=0.0, kind="meteor")
+    with pytest.raises(ValueError):
+        FaultPlan([FaultEvent(time=1.0, kind=CRASH)])        # no executor
+    with pytest.raises(ValueError):
+        FaultPlan([FaultEvent(time=1.0, kind=DROPOUT)])      # no client
+    plan = FaultPlan([FaultEvent(time=5.0, kind=RESTART, executor=1),
+                      FaultEvent(time=1.0, kind=CRASH, executor=1),
+                      FaultEvent(time=1.0, kind=CRASH, executor=0)])
+    assert [(e.time, e.kind, e.executor) for e in plan] == [
+        (1.0, CRASH, 0), (1.0, CRASH, 1), (5.0, RESTART, 1)]
+
+
+def test_random_plan_is_seed_deterministic_and_spares():
+    kw = dict(horizon=100.0, executors=[0, 1, 2, 3], clients=list(range(20)),
+              crash_rate=0.05, restart_delay=4.0, dropout_rate=0.05,
+              corrupt_rate=0.03, blackout_rate=0.02, slowdown_rate=0.02,
+              spare=2)
+    a, b = FaultPlan.random(seed=11, **kw), FaultPlan.random(seed=11, **kw)
+    assert a.events == b.events
+    assert FaultPlan.random(seed=12, **kw).events != a.events
+    # the first `spare` executors (sorted) are never crashed, and every
+    # crash is paired with a restart for the same executor
+    crashed = [e.executor for e in a.of_kind(CRASH)]
+    assert all(k >= 2 for k in crashed)
+    assert sorted(crashed) == sorted(e.executor for e in a.of_kind(RESTART))
+
+
+def test_crash_restart_one_shot_lifecycle():
+    fi = FaultInjector(FaultPlan([
+        FaultEvent(time=2.0, kind=CRASH, executor=1),
+        FaultEvent(time=6.0, kind=RESTART, executor=1)]))
+    assert fi.crash_due(1, 1.9) is None
+    assert fi.crash_due(1, 2.5) == 2.0
+    assert fi.crash_in(1, 0.0, 5.0) == (0, 2.0)
+    assert fi.fire_crash(1, 2.5) is True
+    assert fi.crash_due(1, 2.5) is None          # consumed
+    assert fi.fire_crash(1, 99.0) is False
+    assert fi.restarts_due(5.0) == []
+    assert fi.restarts_due(6.0) == [1]
+    assert fi.restarts_due(6.0) == []            # consumed
+
+
+def test_injector_state_roundtrips():
+    fi = FaultInjector(FaultPlan([
+        FaultEvent(time=1.0, kind=CORRUPT, executor=0)]),
+        RetryPolicy(max_retries=1))
+    assert fi.take_corrupt(0, 2.0) is True
+    assert fi.take_corrupt(0, 2.0) is False      # one-shot
+    retry, give_up = fi.charge_retry([7, 7])
+    assert retry == [7] and give_up == [7]       # budget of 1
+    blob = pickle.loads(pickle.dumps(fi.state_dict()))
+    fj = FaultInjector(fi.plan, fi.retry)
+    fj.load_state_dict(blob)
+    assert fj.take_corrupt(0, 2.0) is False      # fired state survived
+    assert fj.charge_retry([7]) == ([], [7])     # budget state survived
+    fj.clear_retries([7])
+    assert fj.charge_retry([7]) == ([7], [])
+
+
+def test_dropout_windows_and_split():
+    fi = FaultInjector(FaultPlan([
+        FaultEvent(time=10.0, kind=DROPOUT, client=3, duration=5.0)]))
+    assert not fi.client_down(3, 9.9)
+    assert fi.client_down(3, 10.0) and fi.client_down(3, 14.9)
+    assert not fi.client_down(3, 15.0)
+    tasks = [ClientTask(3, 10), ClientTask(4, 10)]
+    up, down = fi.split_up(tasks, 8.0, 1.0)      # window opens after span
+    assert [t.client for t in up] == [3, 4] and down == []
+    up, down = fi.split_up(tasks, 8.0, 3.0)      # window opens inside span
+    assert [t.client for t in up] == [4]
+    assert [t.client for t in down] == [3]
+    assert fi.upload_lost([3], 9.0, 11.0)        # opens mid-flight
+    assert not fi.upload_lost([3], 16.0, 20.0)
+
+
+def test_blackout_pauses_transfers():
+    fi = FaultInjector(FaultPlan([
+        FaultEvent(time=4.0, kind=BLACKOUT, duration=2.0),
+        FaultEvent(time=8.0, kind=BLACKOUT, duration=1.0, executor=1)]))
+    assert fi.xfer_end(0.0, 3.0) == 3.0          # finishes before window
+    assert fi.xfer_end(0.0, 5.0) == 7.0          # pauses through [4, 6)
+    assert fi.xfer_end(4.5, 0.0) == 6.0          # link down at start
+    # executor-local window only pauses that executor's transfers
+    assert fi.xfer_end(7.5, 1.0, executor=1) == 9.5
+    assert fi.xfer_end(7.5, 1.0, executor=0) == 8.5
+
+
+def test_price_upload_timeout_backoff_and_give_up():
+    fi = FaultInjector(
+        FaultPlan([FaultEvent(time=0.0, kind=BLACKOUT, duration=100.0)]),
+        RetryPolicy(timeout_s=2.0, max_retries=2, backoff_s=1.0,
+                    backoff_mult=2.0))
+    from repro.core.faults import FaultCounters
+    c = FaultCounters()
+    # the link is dark for 100s: every attempt times out -> payload lost
+    assert fi.price_upload(0.0, 1.0, None, [5], 10, c) is None
+    assert c.timeouts == 3 and c.retries == 2
+    # no blackout: first attempt lands at t + duration
+    fj = FaultInjector(FaultPlan(()), RetryPolicy(timeout_s=2.0))
+    assert fj.price_upload(5.0, 1.5, None, [5], 10) == 6.5
+
+
+def test_slowdown_scales_models_and_composes():
+    fi = FaultInjector(FaultPlan([
+        FaultEvent(time=0.0, kind=SLOWDOWN, executor=0, duration=10.0,
+                   factor=2.0),
+        FaultEvent(time=5.0, kind=SLOWDOWN, executor=0, duration=10.0,
+                   factor=3.0)]))
+    assert fi.slowdown(0, 2.0) == 2.0
+    assert fi.slowdown(0, 7.0) == 6.0            # windows compound
+    assert fi.slowdown(1, 7.0) == 1.0
+    m = WorkloadModel(t_sample=0.5, b=1.0)
+    sm = fi.scaled_model(m, 0, 7.0)
+    assert sm.t_sample == 3.0 and sm.b == 6.0
+    assert fi.scaled_model(m, 0, 50.0) is m      # outside: same object
+    assert fi.scaled_model(None, 0, 7.0) is None
+
+
+def test_executor_failure_pickle_roundtrip():
+    err = ExecutorFailure(2, 5, 7, device="cpu:0", chunk=(6, 9), vtime=12.5)
+    back = pickle.loads(pickle.dumps(err))
+    assert isinstance(back, ExecutorFailure)
+    assert (back.executor, back.rnd, back.task_index) == (2, 5, 7)
+    assert back.device == "cpu:0"
+    assert back.chunk == (6, 9)
+    assert back.vtime == 12.5
+    assert "device=cpu:0" in str(back) and "chunk=[6,9)" in str(back)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def _loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+GRAD_FN = jax.jit(jax.value_and_grad(_loss_fn))
+PARAMS0 = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+ENGINES = ["bsp", "semi-sync", "async"]
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification_clients(30, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10,
+                                       seed=1)
+
+
+def _build(data, engine, faults=None, retry=None, opts=None, network=None,
+           ckpt_dir=None, fail_at=None, K=3, **kw):
+    algo = make_algorithm("fedavg", grad_fn=GRAD_FN, lr=0.1, local_steps=2)
+    sm = ClientStateManager(tempfile.mkdtemp())
+    execs = []
+    for k in range(K):
+        e = SequentialExecutor(k, algo, state_manager=sm,
+                               speed_model=lambda kk, r: 0.0,
+                               timer=TickTimer(1.0))
+        if fail_at and k == fail_at[0]:
+            e.fail_at = fail_at[1]
+        execs.append(e)
+    cm = (CheckpointManager(ckpt_dir, every_rounds=1, keep=10)
+          if ckpt_dir else None)
+    if opts is None:
+        opts = {} if engine == "bsp" else {"chunk_size": 2}
+    return ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
+                        data_by_client=data, clients_per_round=8, seed=7,
+                        round_engine=engine, engine_opts=opts,
+                        faults=faults, retry=retry, network=network,
+                        checkpoint_manager=cm, **kw)
+
+
+def _chaos_plan():
+    return FaultPlan.random(seed=3, horizon=80.0, executors=[0, 1, 2],
+                            clients=list(range(30)),
+                            crash_rate=0.05, restart_delay=5.0,
+                            dropout_rate=0.1, dropout_duration=4.0,
+                            corrupt_rate=0.05,
+                            blackout_rate=0.03, blackout_duration=1.0,
+                            slowdown_rate=0.03, slowdown_duration=6.0)
+
+
+def _tot(srv, key):
+    return sum(m.extra.get(key, 0.0) for m in srv.history)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_empty_plan_is_bit_exact_with_none(data, engine):
+    """An empty FaultPlan (injector active, nothing scheduled) must leave
+    params AND makespans identical to faults=None — consulting the
+    injector may not move a single float."""
+    a = _build(data, engine)
+    a.run(5)
+    b = _build(data, engine, faults=FaultPlan(()),
+               retry=RetryPolicy(timeout_s=math.inf))
+    b.run(5)
+    assert params_digest(a.params) == params_digest(b.params)
+    assert [m.makespan for m in a.history] == \
+        [m.makespan for m in b.history]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_chaos_soak_deterministic_no_livelock(data, engine):
+    """20 rounds under a dense seeded chaos plan (all six fault kinds, a
+    network model so the retry/blackout pricing paths run): two runs agree
+    bit-for-bit on params, the run terminates (no livelock), and the
+    unified metrics schema is present every round."""
+    plan = _chaos_plan()
+    net = NetworkModel.uniform(8e6, 16e6, latency_s=0.05)
+    digests, servers = [], []
+    for _ in range(2):
+        srv = _build(data, engine, faults=plan,
+                     retry=RetryPolicy(timeout_s=3.0, max_retries=2,
+                                       backoff_s=0.5), network=net)
+        srv.run(20)
+        digests.append(params_digest(srv.params))
+        servers.append(srv)
+    assert digests[0] == digests[1]
+    srv = servers[0]
+    assert len(srv.history) == 20
+    for m in srv.history:         # unified failure/dropout metrics schema
+        assert "retries" in m.extra
+        assert "corrupt_payloads" in m.extra
+        assert "dropped_clients" in m.extra
+        assert m.failures >= 0
+    # the plan actually exercised the machinery
+    assert _tot(srv, "fault_crashes") >= 1
+    assert _tot(srv, "fault_restarts") >= 1
+    assert _tot(srv, "corrupt_payloads") >= 1
+    assert _tot(srv, "retries") >= 1
+
+
+def test_chunk_timeout_retries_then_drops(data):
+    """A blackout longer than every retry's timeout+backoff forces the
+    timeout/backoff path: attempts are re-priced and counted, and the
+    payload is eventually lost (clients dropped from the round)."""
+    plan = FaultPlan([FaultEvent(time=0.0, kind=BLACKOUT, duration=500.0)])
+    srv = _build(data, "bsp", faults=plan,
+                 retry=RetryPolicy(timeout_s=1.0, max_retries=2,
+                                   backoff_s=0.5),
+                 network=NetworkModel.uniform(8e6, 16e6, latency_s=0.05))
+    srv.run(2)
+    assert _tot(srv, "chunk_timeouts") >= 3      # every attempt timed out
+    assert _tot(srv, "retries") >= 2
+    assert _tot(srv, "dropped_clients") >= 1     # payloads lost for good
+
+
+@pytest.mark.parametrize("engine,opts", [
+    ("bsp", {"quorum_frac": 0.5}),
+    ("semi-sync", {"chunk_size": 2, "quorum_frac": 0.5})])
+def test_quorum_commits_degraded_rounds(data, engine, opts):
+    plan = _chaos_plan()
+    srv = _build(data, engine, faults=plan, retry=RetryPolicy(),
+                 opts=opts,
+                 network=NetworkModel.uniform(8e6, 16e6, latency_s=0.05))
+    srv.run(15)
+    assert _tot(srv, "quorum_commits") >= 1
+    # deterministic under the quorum too
+    srv2 = _build(data, engine, faults=plan, retry=RetryPolicy(),
+                  opts=opts,
+                  network=NetworkModel.uniform(8e6, 16e6, latency_s=0.05))
+    srv2.run(15)
+    assert params_digest(srv.params) == params_digest(srv2.params)
+
+
+def test_quorum_frac_validated():
+    from repro.core.engine import BSPEngine, SemiSyncEngine
+    with pytest.raises(ValueError):
+        BSPEngine(quorum_frac=0.0)
+    with pytest.raises(ValueError):
+        SemiSyncEngine(chunk_size=2, quorum_frac=1.5)
+
+
+def test_wildcard_fail_at_consistent_run_queue_vs_gang(data):
+    """``fail_at=(-1, i)`` (fail in EVERY round at task i) must behave
+    identically whether the round takes the gang-dispatch path or the
+    serial run_queue path: the executor is ineligible for the gang (its
+    compiled fast path would skip the failure hook) and raises from the
+    eager path instead — the BSP failure handling then re-runs its queue.
+    """
+    probe = SequentialExecutor(0, make_algorithm(
+        "fedavg", grad_fn=GRAD_FN, lr=0.1), fail_at=(-1, 2))
+    assert probe.fail_pending(0) and probe.fail_pending(17)
+    probe.fail_at = (3, 2)
+    assert probe.fail_pending(3) and not probe.fail_pending(4)
+
+    a = _build(data, "bsp", fail_at=(1, (-1, 0)), gang_dispatch=True)
+    ma = a.run(2)
+    b = _build(data, "bsp", fail_at=(1, (-1, 0)), gang_dispatch=False)
+    mb = b.run(2)
+    # the wildcard fired in round 0 under both dispatch modes, the failed
+    # executor was dropped, and the surviving params agree bit-for-bit
+    assert ma[0].failures == 1 and mb[0].failures == 1
+    assert 1 not in a.executors and 1 not in b.executors
+    assert params_digest(a.params) == params_digest(b.params)
+    assert [m.makespan for m in ma] == [m.makespan for m in mb]
+
+
+def test_executor_failure_carries_context(data):
+    algo = make_algorithm("fedavg", grad_fn=GRAD_FN, lr=0.1, local_steps=2)
+    ex = SequentialExecutor(0, algo,
+                            state_manager=ClientStateManager(
+                                tempfile.mkdtemp()),
+                            speed_model=lambda kk, r: 0.0,
+                            timer=TickTimer(1.0), fail_at=(0, 1))
+    payload = algo.broadcast_payload(PARAMS0, algo.server_init(PARAMS0))
+    tasks = [ClientTask(c, data[c].n_samples) for c in (0, 1, 2)]
+    with pytest.raises(ExecutorFailure) as ei:
+        ex.run_queue(0, tasks, payload, data)
+    err = ei.value
+    assert err.executor == 0 and err.rnd == 0 and err.task_index == 1
+    assert err.chunk is not None and err.vtime is not None
+    back = pickle.loads(pickle.dumps(err))
+    assert (back.executor, back.rnd, back.task_index, back.chunk,
+            back.vtime) == (err.executor, err.rnd, err.task_index,
+                            err.chunk, err.vtime)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity
+# ---------------------------------------------------------------------------
+
+def test_restore_rejects_corrupt_blob_and_walks_back(data):
+    d = tempfile.mkdtemp()
+    srv = _build(data, "bsp", ckpt_dir=d)
+    srv.run(3)
+    want_round2 = params_digest(srv.params)
+    # corrupt the newest checkpoint's blob (bit rot): flip payload bytes
+    # while keeping the manifest intact
+    steps = sorted(s for s in os.listdir(d) if s.startswith("step_"))
+    newest = os.path.join(d, steps[-1])
+    blob_path = os.path.join(newest, "server.pkl")
+    with open(blob_path, "rb") as f:
+        blob = pickle.load(f)
+    blob["params"] = jax.tree.map(lambda x: np.asarray(x) + 1.0,
+                                  blob["params"])
+    with open(blob_path, "wb") as f:
+        pickle.dump(blob, f)
+    # direct restore refuses, leaving the server untouched
+    fresh = _build(data, "bsp")
+    before = params_digest(fresh.params)
+    with pytest.raises(ValueError, match="integrity"):
+        CheckpointManager(d).restore(fresh, newest)
+    assert params_digest(fresh.params) == before
+    # restore_latest walks back to the newest VALID checkpoint (round 2)
+    got = restore_latest(fresh, d)
+    assert got == 2
+    assert fresh.round == 2
+    # ...and replaying the final round reproduces the uninterrupted params
+    fresh.run_round()
+    assert params_digest(fresh.params) == want_round2
