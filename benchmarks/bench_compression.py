@@ -1,0 +1,150 @@
+"""Compiled-compression benchmark (DESIGN.md §7): codec throughput — eager
+per-span host codecs vs the one-dispatch compiled group codecs — and the
+makespan-vs-loss frontier of {none, topk, int8, powersgd-r4, powersgd-r8}
+under the constrained-uplink population of ``bench_network``.
+
+What it demonstrates (ISSUE 7 acceptance): compressing a bench-sized flat
+partial through the compiled path (one fused jit per group buffer, residual
+device-resident) beats the eager reference (host numpy per span, residual
+round-tripped through a dict) by >= 3x in MB/s, and the PowerSGD cells
+extend the makespan/loss frontier beyond the sparse/quantized codecs under
+a 40 kbps median uplink.
+
+``BENCH_COMPRESSION_ROUNDS`` overrides the frontier round count and
+``BENCH_COMPRESSION_REPS`` the throughput timing reps (CI smoke runs few).
+"""
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import NetworkModel
+from repro.core.aggregation import Op, wire_bytes
+from repro.core.compression import make_compressor
+from repro.core.flat import FlatLayout, flat_sums
+from repro.data import synthesize_capacity_trace
+
+ROUNDS = int(os.environ.get("BENCH_COMPRESSION_ROUNDS", "8"))
+REPS = int(os.environ.get("BENCH_COMPRESSION_REPS", "30"))
+SKIP = max(1, ROUNDS // 5)
+N_CLIENTS = 120
+CLIENTS_PER_ROUND = 32
+K = 4
+MEDIAN_KBPS = 40.0          # constrained last-mile uplink: comm-bound rounds
+
+
+# ---------------------------------------------------------------------------
+# codec throughput: eager per-span host codecs vs compiled one-dispatch, on
+# flat partials at two broadcast sizes — "small" is the network benchmark's
+# own mlp delta (2762 floats, where per-call dispatch overhead dominates
+# both paths) and "large" is the same architecture scaled to ~183k floats
+# (~731 KB), where the codec arithmetic dominates and the fused kernel's
+# O(n log k) top-k beats the eager full argsort
+# ---------------------------------------------------------------------------
+
+SIZES = [("small", dict(dim=32, hidden=64, classes=10)),
+         ("large", dict(dim=256, hidden=512, classes=100))]
+
+
+def _bench_partial(shape, seed=0):
+    ops = {"delta": Op.WEIGHTED_AVG}
+    payload = {"delta": common.mlp_params(seed=seed, **shape)}
+    layout = FlatLayout.build(ops, payload)
+    bufs = layout.flatten(payload)
+    return {"sums": flat_sums(dict(bufs)), "layout": layout,
+            "weights": {"delta": 1.0}, "counts": {"delta": 1},
+            "collected": {}, "n_clients": 1}
+
+
+def _block(wire):
+    """Force every segment of every compressed buffer to finish."""
+    for buf in wire["sums"]["buffers"].values():
+        if isinstance(buf, dict) and buf.get("__compressed__"):
+            for kind, seg in buf["segments"]:
+                if kind == "comp":
+                    for v in seg.data.values():
+                        jax.block_until_ready(v)
+                else:
+                    jax.block_until_ready(seg)
+        else:
+            np.asarray(buf)
+
+
+def _throughput_mbps(comp, partial) -> float:
+    raw = wire_bytes(partial)
+    for _ in range(3):                      # warmup: jit compile + caches
+        _block(comp.compress_partial(partial, key="exec0"))
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        _block(comp.compress_partial(partial, key="exec0"))
+    dt = time.perf_counter() - t0
+    return (raw * REPS) / dt / 1e6
+
+
+def _codec_throughput() -> None:
+    cells = [
+        ("topk/eager", lambda: make_compressor("topk", compiled=False)),
+        ("topk/compiled", lambda: make_compressor("topk")),
+        ("int8/eager", lambda: make_compressor("int8", compiled=False)),
+        ("int8/compiled", lambda: make_compressor("int8")),
+        ("powersgd-r4/compiled", lambda: make_compressor("powersgd",
+                                                         rank=4)),
+    ]
+    for size, shape in SIZES:
+        partial = _bench_partial(shape)
+        kb = wire_bytes(partial) / 1024.0
+        mbps = {}
+        for name, mk in cells:
+            mbps[name] = _throughput_mbps(mk(), partial)
+            common.emit(f"compression/codec/{size}/{name}",
+                        1e6 / max(mbps[name], 1e-9),  # us per MB processed
+                        f"mbps={mbps[name]:.1f} payload_kb={kb:.1f}")
+        for kind in ("topk", "int8"):
+            ratio = (mbps[f"{kind}/compiled"]
+                     / max(mbps[f"{kind}/eager"], 1e-9))
+            common.emit(f"compression/codec/{size}/{kind}/compiled_vs_eager",
+                        ratio, f"speedup_x={ratio:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# makespan-vs-loss frontier under the constrained uplink
+# ---------------------------------------------------------------------------
+
+FRONTIER = [
+    ("none", lambda: None),
+    ("topk", lambda: make_compressor("topk", 0.05)),
+    ("int8", lambda: make_compressor("int8")),
+    ("powersgd-r4", lambda: make_compressor("powersgd", rank=4)),
+    ("powersgd-r8", lambda: make_compressor("powersgd", rank=8)),
+]
+
+
+def _net() -> NetworkModel:
+    return NetworkModel.from_trace(synthesize_capacity_trace(
+        N_CLIENTS, seed=13, dist="uniform",
+        median_uplink_kbps=MEDIAN_KBPS))
+
+
+def _frontier() -> None:
+    for name, mk in FRONTIER:
+        srv = common.build_server(
+            n_clients=N_CLIENTS, clients_per_round=CLIENTS_PER_ROUND, K=K,
+            scheduler="parrot", warmup_rounds=2, network=_net(),
+            compressor=mk())
+        hist = [srv.run_round() for _ in range(ROUNDS)]
+        makespan = float(np.mean([m.makespan for m in hist][SKIP:]))
+        wire_kb = float(np.mean(
+            [m.extra.get("comm_wire_bytes", 0.0) for m in hist][SKIP:])
+            / 1024.0)
+        loss = common.eval_loss(srv)
+        common.emit(f"compression/frontier/{name}/makespan",
+                    makespan * 1e6,
+                    f"loss={loss:.4f} wire_kb={wire_kb:.1f} "
+                    f"wire_ratio={srv._wire_ratio:.3f}")
+
+
+def run() -> None:
+    _codec_throughput()
+    _frontier()

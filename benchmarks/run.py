@@ -24,6 +24,9 @@ Mapping to the paper:
   bench_network     — trace-driven network simulation: makespan over
                       {uniform, lognormal} bandwidth x {none, topk, int8}
                       compressor grid + diurnal availability
+  bench_compression — compiled codec throughput (eager vs one-dispatch
+                      MB/s) + {none, topk, int8, powersgd-r4/r8} frontier
+                      under the constrained uplink
   bench_device_scaling — device-parallel executors: steps/s at 1/2/4 virtual
                       devices (subprocess cells) + params bit-parity
   bench_fault_tolerance — makespan / final-loss over a fault-rate grid,
@@ -44,8 +47,8 @@ sys.path.insert(0, _ROOT)
 MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
         "bench_memory", "bench_comm", "bench_algorithms",
         "bench_aggregation", "bench_client_training", "bench_round_modes",
-        "bench_network", "bench_device_scaling", "bench_fault_tolerance",
-        "bench_kernels", "roofline"]
+        "bench_network", "bench_compression", "bench_device_scaling",
+        "bench_fault_tolerance", "bench_kernels", "roofline"]
 
 # convenience aliases on top of the bench_ prefix rule
 ALIASES = {"faults": "bench_fault_tolerance"}

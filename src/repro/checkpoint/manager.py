@@ -103,6 +103,16 @@ class CheckpointManager:
                 "faults": (server.faults.state_dict()
                            if getattr(server, "faults", None) is not None
                            else None),
+                # compressor state (top-k error-feedback residuals, PowerSGD
+                # P/Q warm starts): without it a resume under compression
+                # silently diverges from the uninterrupted run.  hasattr-
+                # guarded: duck-typed custom compressors without state_dict
+                # checkpoint as stateless.
+                "compressor": (server.compressor.state_dict()
+                               if getattr(server, "compressor", None)
+                               is not None
+                               and hasattr(server.compressor, "state_dict")
+                               else None),
                 "time": time.time(),
             }
             digest = params_digest(blob["params"])
@@ -172,6 +182,9 @@ class CheckpointManager:
         server.engine.load_state_dict(blob.get("engine"))
         if getattr(server, "faults", None) is not None:
             server.faults.load_state_dict(blob.get("faults"))
+        if getattr(server, "compressor", None) is not None \
+                and hasattr(server.compressor, "load_state_dict"):
+            server.compressor.load_state_dict(blob.get("compressor"))
         # reconcile the executor topology with the checkpointed one: a
         # fresh server is constructed with the FULL executor set, but the
         # saved run may have had some crashed — retire those (releasing

@@ -41,7 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.flat import FlatLayout, flat_sums, is_flat_partial
+from repro.core.flat import (FlatLayout, flat_sums, is_compressed_buffer,
+                             is_flat_partial)
 
 
 class Op(enum.Enum):
@@ -249,9 +250,15 @@ def merge_partials(acc: Optional[Dict[str, Any]],
     buffer-wise; legacy nested partials merge per-entry."""
     if acc is None:
         out = dict(partial)
-        out["sums"] = (flat_sums(dict(partial["sums"]["buffers"]))
-                       if is_flat_partial(partial)
-                       else dict(partial["sums"]))
+        if is_flat_partial(partial):
+            # compressed wire buffers (lazy decompress) decode here in one
+            # dispatch per group; the accumulator itself stays dense
+            from repro.core.compression import densify_buffer
+            out["sums"] = flat_sums(
+                {g: (densify_buffer(b) if is_compressed_buffer(b) else b)
+                 for g, b in partial["sums"]["buffers"].items()})
+        else:
+            out["sums"] = dict(partial["sums"])
         out["weights"] = dict(partial.get("weights", {}))
         out["counts"] = dict(partial.get("counts", {}))
         out["collected"] = {k: list(v)
@@ -264,9 +271,17 @@ def merge_partials(acc: Optional[Dict[str, Any]],
         if la is not None and lp is not None \
                 and la.signature() != lp.signature():
             raise ValueError("flat partials built under different layouts")
+        from repro.core.compression import densify_buffer, fold_buffer_into
         bufs = acc["sums"]["buffers"]
         for g, b in partial["sums"]["buffers"].items():
-            bufs[g] = bufs[g] + _colocate(b, bufs[g]) if g in bufs else b
+            if g not in bufs:
+                bufs[g] = densify_buffer(b) if is_compressed_buffer(b) else b
+            elif is_compressed_buffer(b):
+                # fused decompress-into-fold: segments add straight into the
+                # dense accumulator, no per-partial dense intermediate
+                bufs[g] = fold_buffer_into(bufs[g], b)
+            else:
+                bufs[g] = bufs[g] + _colocate(b, bufs[g])
     else:
         sums = acc["sums"]
         for name, v in partial["sums"].items():
@@ -305,8 +320,11 @@ def scale_partial(partial: Dict[str, Any], gamma: float) -> Dict[str, Any]:
     out = dict(partial)
     sums = partial.get("sums", {})
     if is_flat_partial(partial):
-        out["sums"] = flat_sums({g: b * gamma
-                                 for g, b in sums["buffers"].items()})
+        from repro.core.compression import scale_buffer
+        out["sums"] = flat_sums(
+            {g: (scale_buffer(b, gamma) if is_compressed_buffer(b)
+                 else b * gamma)
+             for g, b in sums["buffers"].items()})
     else:
         out["sums"] = {name: jax.tree.map(lambda x: x * gamma, v)
                        for name, v in sums.items()}
@@ -348,7 +366,23 @@ def reduce_flat_partials(partials: List[Dict[str, Any]], ops: Dict[str, Op],
     for g in (layout.group_sizes if layout is not None else {}):
         bufs = [p["sums"]["buffers"][g] for p in partials
                 if g in p["sums"]["buffers"]]
-        if bufs:
+        if not bufs:
+            continue
+        if any(is_compressed_buffer(b) for b in bufs):
+            # lazily-compressed wire buffers: order-preserving fused
+            # decompress-into-fold (reduce_fn — including the sharded psum —
+            # needs dense same-device buffers, so the compressed path folds
+            # here instead)
+            from repro.core.compression import (densify_buffer,
+                                                fold_buffer_into)
+            total = (densify_buffer(bufs[0])
+                     if is_compressed_buffer(bufs[0]) else bufs[0])
+            for b in bufs[1:]:
+                total = (fold_buffer_into(total, b)
+                         if is_compressed_buffer(b)
+                         else total + _colocate(b, total))
+            totals[g] = total
+        else:
             totals[g] = reduce_fn(bufs)
     out: Dict[str, Any] = {}
     for name, op in ops.items():

@@ -245,6 +245,13 @@ def is_flat_partial(partial: Dict[str, Any]) -> bool:
     return isinstance(partial, dict) and is_flat_sums(partial.get("sums"))
 
 
+def is_compressed_buffer(buf: Any) -> bool:
+    """A group buffer in compressed wire form (see core/compression.py):
+    ``{"__compressed__": True, "segments": [...], "size": n}`` instead of a
+    dense 1-D array.  Compiled codecs ship these all the way to the fold."""
+    return isinstance(buf, dict) and bool(buf.get("__compressed__"))
+
+
 def to_nested_sums(partial: Dict[str, Any]) -> Dict[str, Any]:
     """Degrade a flat partial's sums to the legacy {entry: pytree} form
     (interop with hand-built nested partials)."""
@@ -252,4 +259,8 @@ def to_nested_sums(partial: Dict[str, Any]) -> Dict[str, Any]:
     if layout is None:
         return {}
     buffers = partial["sums"]["buffers"]
+    if any(is_compressed_buffer(b) for b in buffers.values()):
+        from repro.core.compression import densify_buffer
+        buffers = {g: (densify_buffer(b) if is_compressed_buffer(b) else b)
+                   for g, b in buffers.items()}
     return layout.unflatten(buffers)

@@ -117,6 +117,11 @@ class ParrotServer:
                                          warmup_rounds=warmup_rounds,
                                          policy=scheduler_policy)
         self.comm = comm or LocalComm()
+        if isinstance(compressor, str):
+            # convenience: compressor="topk"/"int8"/"powersgd" builds the
+            # compiled default via make_compressor
+            from repro.core.compression import make_compressor
+            compressor = make_compressor(compressor)
         self.compressor = compressor
         self.checkpoint_manager = checkpoint_manager
         self.mode = mode

@@ -17,6 +17,7 @@ from repro.kernels import agg_weighted_sum as _agg
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rmsnorm as _rms
 from repro.kernels import ssm_scan as _ssm
+from repro.kernels import topk_compress as _tkc
 
 
 def _use_interpret() -> bool:
@@ -115,6 +116,17 @@ def agg_fold(acc, delta, weight: float):
     flat_d = delta.reshape(1, -1)
     w = jnp.asarray([weight], jnp.float32)
     return agg_weighted_sum(flat_acc, flat_d, w).reshape(acc.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def fused_topk(x, res, *, k: int):
+    """Fused error-feedback top-k for one 1-D fp32 segment: residual-add,
+    |.| top-k (ties -> lower index), gather, scatter-zero residual — ONE
+    dispatch.  Returns ``(idx, vals, new_residual)``; ``idx`` ascending.
+    The group codecs in ``core/compression.py`` call the underlying
+    ``topk_compress`` building block inside their own per-group jit; this
+    wrapper is the standalone entry point (benchmarks, ad-hoc use)."""
+    return _tkc.topk_with_residual(x, res, k)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
