@@ -31,6 +31,9 @@ Mapping to the paper:
                       devices (subprocess cells) + params bit-parity
   bench_fault_tolerance — makespan / final-loss over a fault-rate grid,
                       quorum-degraded rounds on vs off (alias: faults)
+  bench_population_scaling — streamed-population memory axis: peak RSS and
+                      selection latency at 1k..1M clients, fixed cohort
+                      (alias: population)
   bench_kernels     — Pallas wrapper micro-timings (plumbing check)
   roofline          — §Roofline terms from the dry-run artifacts
 """
@@ -48,10 +51,12 @@ MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
         "bench_memory", "bench_comm", "bench_algorithms",
         "bench_aggregation", "bench_client_training", "bench_round_modes",
         "bench_network", "bench_compression", "bench_device_scaling",
-        "bench_fault_tolerance", "bench_kernels", "roofline"]
+        "bench_fault_tolerance", "bench_population_scaling",
+        "bench_kernels", "roofline"]
 
 # convenience aliases on top of the bench_ prefix rule
-ALIASES = {"faults": "bench_fault_tolerance"}
+ALIASES = {"faults": "bench_fault_tolerance",
+           "population": "bench_population_scaling"}
 
 
 def main(argv=None) -> None:

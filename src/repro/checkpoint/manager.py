@@ -118,11 +118,15 @@ class CheckpointManager:
             digest = params_digest(blob["params"])
             with open(os.path.join(tmp, "server.pkl"), "wb") as f:
                 pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
-            # client-state shards (stateful algorithms)
+            # client-state shards (stateful algorithms); executors usually
+            # share one manager — flush each distinct manager once
             state_dir = os.path.join(tmp, "state")
+            seen = set()
             for ex in server.executors.values():
-                if ex.state_manager is not None:
-                    ex.state_manager.checkpoint(state_dir)
+                sm = ex.state_manager
+                if sm is not None and id(sm) not in seen:
+                    seen.add(id(sm))
+                    sm.checkpoint(state_dir)
             with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
                 json.dump({"round": rnd, "complete": True,
                            "params_digest": digest}, f)
@@ -199,9 +203,12 @@ class CheckpointManager:
             server._revive_executor(k)
         state_dir = os.path.join(step_dir, "state")
         if os.path.isdir(state_dir):
+            seen = set()
             for ex in server.executors.values():
-                if ex.state_manager is not None:
-                    ex.state_manager.restore(state_dir)
+                sm = ex.state_manager
+                if sm is not None and id(sm) not in seen:
+                    seen.add(id(sm))
+                    sm.restore(state_dir)
         return server.round
 
 

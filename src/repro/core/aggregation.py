@@ -298,6 +298,36 @@ def merge_partials(acc: Optional[Dict[str, Any]],
     return acc
 
 
+def tree_reduce_partials(partials: List[Dict[str, Any]],
+                         fan_in: int = 8) -> List[Dict[str, Any]]:
+    """Hierarchical aggregation tree (executor → group → server): reduce a
+    wide partial list level by level, left-folding contiguous groups of
+    ``fan_in`` partials with :func:`merge_partials` (the same O(s)
+    incremental flat fold the async buffer uses) until at most ``fan_in``
+    remain.  The server-side live buffer at any instant is one group
+    accumulator — O(fan_in) partials, not O(K) — and the returned list
+    feeds the ordinary flat reduce (or the placement collective)
+    unchanged.  A list already at or below ``fan_in`` is returned as-is,
+    so narrow folds keep the legacy path byte-for-byte.
+
+    Grouping re-associates the float summation relative to the flat
+    left-fold, which is why the engines only route through the tree above
+    ``fold_fan_in`` (ISSUE pins bit-identity on the exactly-representable
+    payloads of tests/test_flat_aggregation.py)."""
+    if fan_in < 2:
+        raise ValueError(f"fan_in must be >= 2 (got {fan_in})")
+    level = list(partials)
+    while len(level) > fan_in:
+        nxt = []
+        for i in range(0, len(level), fan_in):
+            acc: Optional[Dict[str, Any]] = None
+            for p in level[i:i + fan_in]:
+                acc = merge_partials(acc, p)
+            nxt.append(acc)
+        level = nxt
+    return level
+
+
 def staleness_weight(staleness: float, lam: float) -> float:
     """Bounded-staleness discount γ = 1 / (1 + λ·s): a partial computed
     against a model ``s`` server versions old contributes with weight γ — it

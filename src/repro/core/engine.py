@@ -64,7 +64,8 @@ from repro.core.executor import ExecutorFailure, ExecutorReport
 from repro.core.faults import FaultCounters, scale_report
 from repro.core.network import CommEvent
 from repro.core.scheduler import (ClientTask, Schedule, pick_steal_victim,
-                                  predict_remaining, predict_span)
+                                  predict_remaining, predict_span,
+                                  prefetch_ids)
 from repro.core.workload import RunRecord
 
 
@@ -83,9 +84,10 @@ def _ship_partial(srv, executor: int, compressed: Dict) -> Dict:
 
 def _tasks_of(srv, clients) -> List[ClientTask]:
     """Rebuild ClientTasks from client ids (fault re-run pools carry ids —
-    the sample counts come from the server's dataset registry)."""
-    return [ClientTask(int(c), srv.data_by_client[int(c)].n_samples)
-            for c in clients]
+    the sample counts come from the population registry, so no client
+    batches materialise here)."""
+    n_of = srv.population.n_samples
+    return [ClientTask(int(c), n_of(int(c))) for c in clients]
 
 
 def _host_tree(tree):
@@ -343,7 +345,7 @@ class RoundEngine:
         chunk — what the engines' chunk-granular predictions consume."""
         if rep.n_tasks == 0:
             return None
-        n = sum(srv.data_by_client[c].n_samples
+        n = sum(srv.population.n_samples(c)
                 for c in rep.completed_clients)
         return RunRecord(round=rnd, client=rep.completed_clients[0],
                          executor=rep.executor, n_samples=n,
@@ -599,6 +601,9 @@ class BSPEngine(RoundEngine):
             extra["idle_time"] = idle
         if srv.faults is not None or counters.quorum_commits:
             self._fault_extra(extra, counters)
+        sm_extra = srv._state_manager_extra()
+        if sm_extra is not None:
+            extra["state_manager"] = sm_extra
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,
@@ -1054,6 +1059,9 @@ class SemiSyncEngine(RoundEngine):
             extra["idle_time"] = idle
         if fi is not None or counters.quorum_commits:
             self._fault_extra(extra, counters)
+        sm_extra = srv._state_manager_extra()
+        if sm_extra is not None:
+            extra["state_manager"] = sm_extra
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,
@@ -1140,6 +1148,13 @@ class SemiSyncEngine(RoundEngine):
                 return
             es.offset += len(next_chunk)
             es.inflight = True
+            if es.queue and srv.algorithm.stateful:
+                # schedule-keyed prefetch: stage the next chunk's state
+                # shards while this chunk's span elapses on the virtual
+                # clock (pure host-RAM staging — no metric changes)
+                sm = srv.executors[k].state_manager
+                if sm is not None:
+                    sm.prefetch(prefetch_ids(es.queue, chunk))
             if fi is not None:
                 scale_report(rep, fi.slowdown(k, abs0 + start))
                 # crash inside the chunk's span (download + compute; the
@@ -1420,6 +1435,12 @@ class AsyncEngine(RoundEngine):
                 return
             es.offset += len(tasks)
             es.inflight = True
+            if es.queue and srv.algorithm.stateful:
+                # schedule-keyed prefetch: the next chunk's state shards
+                # stage while this chunk's span elapses on the virtual clock
+                sm = srv.executors[k].state_manager
+                if sm is not None:
+                    sm.prefetch(prefetch_ids(es.queue, chunk))
             if fi is not None:
                 scale_report(rep, fi.slowdown(k, start))
                 down_un = 0.0   # unaccounted read: push_chunk does billing
@@ -1628,6 +1649,9 @@ class AsyncEngine(RoundEngine):
             netsim.reset_counters()
         if fi is not None:
             self._fault_extra(extra, self._counters)
+        sm_extra = srv._state_manager_extra()
+        if sm_extra is not None:
+            extra["state_manager"] = sm_extra
         metrics = RoundMetrics(
             round=rnd, makespan=makespan,
             wall_time=time.perf_counter() - t_wall,

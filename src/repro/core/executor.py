@@ -433,6 +433,12 @@ class SequentialExecutor:
                 groups[key] = []
                 order.append(key)
             groups[key].append(t)
+        if len(self._sig_cache) > 4096:
+            # streamed populations cycle through many distinct clients; an
+            # entry whose ClientData was evicted (dead weakref) can never
+            # hit again, so shed those instead of growing O(M)
+            self._sig_cache = {c: v for c, v in self._sig_cache.items()
+                               if v[0]() is not None}
         blocks: List[Tuple[Any, List[ClientTask]]] = []
         for key in order:
             q = groups[key]
@@ -455,8 +461,18 @@ class SequentialExecutor:
         todo = [t for t in tasks
                 if not (skip_clients and t.client in skip_clients)]
         vtime = 0.0
-        for key, block in self._plan_blocks(todo, data_by_client):
+        blocks = self._plan_blocks(todo, data_by_client)
+        for bi, (key, block) in enumerate(blocks):
             kind = key[0]
+            if self.algorithm.stateful and self.state_manager is not None \
+                    and bi + 1 < len(blocks):
+                # schedule-keyed look-ahead: stage the NEXT block's state
+                # shards into the manager's RAM tier while this block's
+                # compute occupies the device — the load overlaps compute
+                # on the virtual clock (prefetch is outside the timed span
+                # and never perturbs the per-client LRU)
+                self.state_manager.prefetch(
+                    [t.client for t in blocks[bi + 1][1]])
             compiles0 = client_step.compile_events()
             states = None
             if self.algorithm.stateful:
@@ -648,6 +664,12 @@ def run_queues_ganged(executors: Dict[int, "SequentialExecutor"], rnd: int,
         blocks = [p[i][1] for p in plans]
         sig = plans[0][i][0][1]
         B_pad = client_step._bucket(max(len(b) for b in blocks))
+        if algo.stateful and i + 1 < n_waves:
+            # stage wave i+1's state shards while wave i computes
+            for j, ex in enumerate(exs):
+                if ex.state_manager is not None:
+                    ex.state_manager.prefetch(
+                        [t.client for t in plans[j][i + 1][1]])
         preps, states = [], None
         if algo.stateful:
             states = []
@@ -695,7 +717,7 @@ def run_queues_ganged(executors: Dict[int, "SequentialExecutor"], rnd: int,
                                            out_payload)
             aggs[j].fold_block(
                 out_payload,
-                [float(data_by_client[t.client].n_samples) for t in block])
+                [float(t.n_samples) for t in block])
             if algo.stateful and new_states is not None:
                 ex.state_manager.save_many(
                     {t.client: jax.tree.map(lambda x: x[b], new_states)

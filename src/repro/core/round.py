@@ -40,9 +40,11 @@ import numpy as np
 
 from repro.comm.base import Communicator
 from repro.comm.local import LocalComm
-from repro.core.aggregation import flat_aggregate, global_aggregate
+from repro.core.aggregation import (flat_aggregate, global_aggregate,
+                                    is_flat_partial, tree_reduce_partials)
 from repro.core.algorithms import ClientData, FLAlgorithm
 from repro.core.executor import SequentialExecutor
+from repro.core.population import ClientPopulation, as_population
 from repro.core.faults import FaultInjector, FaultPlan, RetryPolicy
 from repro.core.network import ClientAvailability, NetworkModel
 from repro.core.placement import DevicePlacement
@@ -90,6 +92,7 @@ class ParrotServer:
                  availability: Optional[ClientAvailability] = None,
                  faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
+                 fold_fan_in: int = 16,
                  seed: int = 0):
         from repro.core.engine import make_engine
         self.params = params
@@ -110,8 +113,25 @@ class ParrotServer:
         # SPMD gang dispatch of gangable BSP rounds (no-op without a
         # multi-device placement; see engine.BSPEngine._dispatch)
         self.gang_dispatch = bool(gang_dispatch)
-        self.data_by_client = data_by_client
+        # the population axis (DESIGN.md §11): a plain dict wraps into an
+        # EagerPopulation (cached sorted-id registry); a ClientPopulation —
+        # e.g. a registry-backed LazyPopulation streaming batches through a
+        # bounded fetch cache — passes through, so dataset memory can stay
+        # O(cohort) at million-client scale.  ``data_by_client`` stays the
+        # read path everywhere (populations are Mappings).
+        self.population: ClientPopulation = as_population(data_by_client)
+        self.data_by_client = self.population
         self.clients_per_round = clients_per_round
+        # hierarchical aggregation (executor → group → server): partial
+        # lists wider than this fold through a fan-in tree of merge_partials
+        # levels so server-side buffers stay O(fan_in), not O(K).  At or
+        # below the fan-in (every pinned small-K configuration) the flat
+        # left-fold runs unchanged — bit-exactly the legacy path.
+        # ``fold_fan_in=0`` disables the tree outright.
+        self.fold_fan_in = int(fold_fan_in)
+        # previous cumulative state-manager counters (per-round deltas for
+        # RoundMetrics.extra["state_manager"])
+        self._sm_stats_prev: Dict[str, float] = {}
         self.estimator = WorkloadEstimator(time_window=time_window)
         self.scheduler = ParrotScheduler(self.estimator,
                                          warmup_rounds=warmup_rounds,
@@ -176,24 +196,29 @@ class ParrotServer:
         ``clients_per_round`` (semi-sync over-selection, async refills);
         ``exclude`` removes clients already in flight.  With an availability
         model, clients offline at the current virtual time are filtered
-        before sampling.  The default call (``availability=None``) is
-        rng-identical to the original BSP selection."""
-        if exclude:
-            pool = sorted(set(self.data_by_client) - set(exclude))
-        else:
-            pool = sorted(self.data_by_client)
+        before sampling.
+
+        Cost is O(cohort), not O(M log M): the population keeps a cached
+        sorted-id registry, draws positional indices into the virtual
+        (ids minus exclude) pool and rank-adjusts past the excluded
+        positions — rng-identical to the original
+        ``rng.choice(sorted_pool, ...)`` (pinned by tests/test_population.
+        py), so every engine bit-exactness pin holds.  Availability/fault
+        filters apply per candidate without materialising a boxed-int
+        pool.  Task sample counts come from the registry, so selection
+        never materialises client batches."""
+        filters = []
         if self.availability is not None:
-            pool = [c for c in pool
-                    if self.availability.available(c, self.virtual_now)]
+            av, now = self.availability, self.virtual_now
+            filters.append(lambda c: av.available(c, now))
         if self.faults is not None:
-            pool = [c for c in pool
-                    if not self.faults.client_down(c, self.virtual_now)]
-        size = min(self.clients_per_round if n is None else n, len(pool))
-        if size <= 0:
-            return []
-        ids = self.rng.choice(pool, size=size, replace=False)
-        return [ClientTask(int(c), self.data_by_client[int(c)].n_samples)
-                for c in ids]
+            fi, now = self.faults, self.virtual_now
+            filters.append(lambda c: not fi.client_down(c, now))
+        ids = self.population.sample(
+            self.rng, self.clients_per_round if n is None else n,
+            exclude=exclude, filters=filters)
+        n_of = self.population.n_samples
+        return [ClientTask(c, n_of(c)) for c in ids]
 
     # ------------------------------------------------------------------
     def _plan_backups(self, schedule: Schedule
@@ -232,11 +257,47 @@ class ParrotServer:
         is active: device-resident flat partials reduce with one sharded
         psum per weight group (or colocating D2D left-folds — both
         bit-identical to the host path), landing on the server device.  The
-        engines call this instead of ``global_aggregate`` directly."""
+        engines call this instead of ``global_aggregate`` directly.
+
+        Partial lists wider than ``fold_fan_in`` first reduce through the
+        hierarchical fan-in tree (executor → group → server, reusing the
+        flat incremental fold at each level) so the final reduce — and the
+        placement's collective — sees at most ``fold_fan_in`` partials.  At
+        or below the fan-in this is byte-for-byte the legacy flat
+        left-fold."""
         ops = self.algorithm.ops()
+        if (self.fold_fan_in > 1 and len(partials) > self.fold_fan_in
+                and all(is_flat_partial(p) for p in partials)):
+            partials = tree_reduce_partials(partials, self.fold_fan_in)
         if self.placement is not None:
             return self.placement.global_fold(partials, ops)
         return global_aggregate(partials, ops)
+
+    def _state_manager_extra(self) -> Optional[Dict[str, Any]]:
+        """Per-round client-state cache observability: cumulative
+        ``ClientStateManager.stats`` counters (deduped across executors
+        sharing one manager) are diffed against the previous round, and the
+        current tier byte gauges are attached as-is.  Engines put the
+        result under ``RoundMetrics.extra["state_manager"]``."""
+        managers = {}
+        for ex in self.executors.values():
+            sm = getattr(ex, "state_manager", None)
+            if sm is not None and hasattr(sm, "stats_snapshot"):
+                managers[id(sm)] = sm
+        if not managers or not self.algorithm.stateful:
+            return None
+        total: Dict[str, float] = {}
+        for sm in managers.values():
+            for key, val in sm.stats_snapshot().items():
+                total[key] = total.get(key, 0) + val
+        out: Dict[str, float] = {}
+        for key, val in total.items():
+            if key.endswith("_bytes"):
+                out[key] = val                               # gauge
+            else:
+                out[key] = val - self._sm_stats_prev.get(key, 0)
+        self._sm_stats_prev = total
+        return out
 
     def _drop_executor(self, k: int) -> None:
         """Elastic K shrink: retire a dead executor (and release its device
@@ -280,9 +341,10 @@ class ParrotServer:
         never) — the engines fast-forward an empty round to it."""
         if self.availability is None:
             return self.virtual_now
-        pool = sorted(set(self.data_by_client) - set(exclude or ()))
-        return min((self.availability.next_available(c, self.virtual_now)
-                    for c in pool), default=float("inf"))
+        ex = {int(c) for c in (exclude or ())}
+        return min((self.availability.next_available(int(c), self.virtual_now)
+                    for c in self.population.ids_array()
+                    if int(c) not in ex), default=float("inf"))
 
     def _next_availability_change(self, exclude: Optional[Any] = None
                                   ) -> float:
@@ -297,7 +359,11 @@ class ParrotServer:
             return float("inf")
         t = self.virtual_now
         best = float("inf")
-        for c in sorted(set(self.data_by_client) - set(exclude or ())):
+        ex = {int(c) for c in (exclude or ())}
+        for c in self.population.ids_array():
+            c = int(c)
+            if c in ex:
+                continue
             if self.availability.available(c, t):
                 r = self.availability.remaining(c, t)
                 if math.isfinite(r) and r > 0:

@@ -165,6 +165,14 @@ def split_chunks(tasks: Sequence[ClientTask],
     return [tasks[i:i + chunk_size] for i in range(0, len(tasks), chunk_size)]
 
 
+def prefetch_ids(queue: Sequence[ClientTask], chunk_size: int) -> List[int]:
+    """Client ids of a queue's NEXT dispatch chunk — the schedule-keyed
+    hint the engines hand to ``ClientStateManager.prefetch`` right after
+    dispatching the current chunk, so the following chunk's state shards
+    stream into the RAM tier while this one computes."""
+    return [t.client for t in queue[:max(1, int(chunk_size))]]
+
+
 def predict_span(model: Optional[WorkloadModel],
                  tasks: Sequence[ClientTask],
                  comm: Optional[ChunkCommCost] = None) -> float:

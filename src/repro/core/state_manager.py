@@ -2,14 +2,33 @@
 
 Simulating M stateful clients needs O(s_d · M) state which cannot live in
 accelerator (or even host) memory at scale; Parrot's manager keeps a bounded
-in-memory working set and spills the rest to disk, loading each client's
-state on demand when an executor begins simulating it.  Memory becomes
-O(s_d · K) (one live state per executor) and disk O(s_d · M) — Table 1.
+in-memory working set and spills the rest below.  Memory becomes O(s_d · K)
+(one live state per executor) and disk O(s_d · M) — Table 1.
+
+Million-client layout (DESIGN.md §11) — three tiers, shard-granular below
+tier 0:
+
+  tier 0  per-client LRU of live states (possibly device-resident via
+          ``keep_device=True``), bounded by ``memory_budget_bytes``.
+  tier 1  host-RAM shard cache: evicted states pack into fixed-size shards
+          of ``shard_clients`` consecutive ids (``shard_of = id //
+          shard_clients``), LRU-bounded by ``shard_cache_bytes``.
+  disk    one pickle file *per shard*, not per client — 1M clients at the
+          default shard size is ~16k inodes, not 1M.
+
+Spilled dirty states are content-digested: an eviction whose bytes already
+match the on-disk copy never rewrites it, and clean evictions never touch
+disk at all (their value always has a live copy in a lower tier).
+``prefetch(ids)`` — keyed by the engine's schedule (the next chunk's client
+ids) — stages whole shards into tier 1 ahead of the executor reaching them,
+so state loads overlap compute on the virtual clock and never double-read
+the disk.
 
 Multi-host design: client ids are hash-partitioned across hosts
 (``owner_host``); each host's manager only ever holds its shard, so the
 aggregate footprint scales with hosts.  The manager is checkpointable
-(incremental: only dirty states are rewritten) for fault tolerance.
+(incremental and shard-granular: only dirty shards are rewritten, clean
+ones are hard-linked) for fault tolerance.
 """
 from __future__ import annotations
 
@@ -38,58 +57,182 @@ def _tree_bytes(tree: Any) -> int:
                if hasattr(a, "nbytes"))
 
 
+def _host_tree(tree: Any) -> Any:
+    return jax.tree.map(np.asarray, tree)
+
+
+def _digest(host_tree: Any) -> bytes:
+    return hashlib.blake2s(
+        pickle.dumps(host_tree, protocol=pickle.HIGHEST_PROTOCOL)).digest()
+
+
 class ClientStateManager:
-    """LRU-bounded in-memory store with disk spill.
+    """Tiered LRU store: per-client RAM over shard-file disk spill.
 
     Parameters
     ----------
-    spill_dir: directory for spilled / checkpointed state files.
-    memory_budget_bytes: in-memory working-set bound; 0 -> unbounded
-        (useful for measuring the no-manager baseline in benchmarks).
+    spill_dir: directory for spilled / checkpointed shard files.
+    memory_budget_bytes: tier-0 (per-client) working-set bound; 0 ->
+        unbounded (useful for measuring the no-manager baseline).
+    shard_clients: ids per shard file (``shard = id // shard_clients``).
+    shard_cache_bytes: tier-1 (host-RAM shard cache) bound; None mirrors
+        ``memory_budget_bytes``, 0 -> unbounded.
     """
 
     def __init__(self, spill_dir: str, memory_budget_bytes: int = 1 << 28,
-                 host: int = 0, n_hosts: int = 1):
+                 host: int = 0, n_hosts: int = 1,
+                 shard_clients: int = 64,
+                 shard_cache_bytes: Optional[int] = None):
         self.spill_dir = spill_dir
         self.memory_budget = memory_budget_bytes
         self.host = host
         self.n_hosts = n_hosts
+        self.shard_clients = max(int(shard_clients), 1)
+        self.shard_cache_budget = (memory_budget_bytes
+                                   if shard_cache_bytes is None
+                                   else shard_cache_bytes)
         os.makedirs(spill_dir, exist_ok=True)
+        # tier 0: client -> state (LRU; device arrays allowed)
         self._mem: "collections.OrderedDict[int, Any]" = collections.OrderedDict()
         self._mem_bytes = 0
         self._dirty: set = set()
-        self._on_disk: set = set()
+        # tier 1: shard id -> {client: host state} (LRU over shards)
+        self._shards: "collections.OrderedDict[int, Dict[int, Any]]" = \
+            collections.OrderedDict()
+        self._shard_bytes = 0
+        self._shard_dirty: set = set()
+        # disk: shard id -> clients present in the shard file
+        self._disk_clients: Dict[int, set] = {}
+        # content digests: on-disk value per client, and values staged in
+        # tier 1 awaiting a flush (promoted to ``_digests`` on write)
+        self._digests: Dict[int, bytes] = {}
+        self._staged: Dict[int, bytes] = {}
         self._lock = threading.RLock()
-        self.stats = {"hits": 0, "misses": 0, "spills": 0, "loads": 0}
+        self.stats = {"hits": 0, "misses": 0, "spills": 0, "loads": 0,
+                      "disk_loads": 0, "disk_writes": 0, "prefetched": 0,
+                      "skipped_rewrites": 0}
 
     # ------------------------------------------------------------------ io
-    def _path(self, client: int) -> str:
-        return os.path.join(self.spill_dir, f"client_{client}.pkl")
+    def shard_of(self, client: int) -> int:
+        return int(client) // self.shard_clients
 
-    def _spill_one(self) -> None:
-        client, tree = self._mem.popitem(last=False)          # LRU eviction
-        self._mem_bytes -= _tree_bytes(tree)
-        if client in self._dirty:
-            self._write(client, tree)
-            self._dirty.discard(client)
-        self.stats["spills"] += 1
+    def _shard_path(self, sid: int) -> str:
+        return os.path.join(self.spill_dir,
+                            f"shard_{self.host}_{sid:06d}.pkl")
 
-    def _write(self, client: int, tree: Any) -> None:
-        path = self._path(client)
+    def _read_shard_file(self, sid: int) -> Dict[int, Any]:
+        with open(self._shard_path(sid), "rb") as f:
+            return pickle.load(f)
+
+    def _write_shard_file(self, sid: int, contents: Dict[int, Any]) -> None:
+        path = self._shard_path(sid)
         fd, tmp = tempfile.mkstemp(dir=self.spill_dir, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
-                pickle.dump(jax.tree.map(np.asarray, tree), f,
-                            protocol=pickle.HIGHEST_PROTOCOL)
+                pickle.dump(contents, f, protocol=pickle.HIGHEST_PROTOCOL)
             os.replace(tmp, path)                             # atomic
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
-        self._on_disk.add(client)
+        self.stats["disk_writes"] += 1
 
-    def _read(self, client: int) -> Any:
-        with open(self._path(client), "rb") as f:
-            return pickle.load(f)
+    def _flush_shard(self, sid: int) -> None:
+        """Write one dirty shard: merge its RAM entries over whatever else
+        the shard file holds (RAM is newer), one file write for the whole
+        shard."""
+        ram = self._shards.get(sid, {})
+        on_disk = self._disk_clients.get(sid, set())
+        merged = dict(ram)
+        missing = on_disk - merged.keys()
+        if missing:
+            try:
+                old = self._read_shard_file(sid)
+            except OSError:
+                old = {}
+            for c in missing:
+                if c in old:
+                    merged[c] = old[c]
+        if merged:
+            self._write_shard_file(sid, merged)
+            self._disk_clients[sid] = set(merged)
+        else:
+            try:
+                os.unlink(self._shard_path(sid))
+            except OSError:
+                pass
+            self._disk_clients.pop(sid, None)
+        for c in ram:
+            if c in self._staged:
+                self._digests[c] = self._staged.pop(c)
+        self._shard_dirty.discard(sid)
+
+    def _load_shard(self, sid: int) -> None:
+        """Read one shard file into tier 1 (RAM entries win — they are
+        staged newer values)."""
+        try:
+            disk = self._read_shard_file(sid)
+        except OSError:
+            return
+        self.stats["disk_loads"] += 1
+        ram = self._shards.get(sid)
+        if ram is None:
+            ram = self._shards[sid] = {}
+        for c, tree in disk.items():
+            if c not in ram:
+                ram[c] = tree
+                self._shard_bytes += _tree_bytes(tree)
+        self._shards.move_to_end(sid)
+
+    def _evict_shards(self) -> None:
+        while (self.shard_cache_budget
+               and self._shard_bytes > self.shard_cache_budget
+               and self._shards):
+            sid = next(iter(self._shards))                     # LRU shard
+            if sid in self._shard_dirty:
+                self._flush_shard(sid)
+            contents = self._shards.pop(sid)
+            self._shard_bytes -= sum(_tree_bytes(t)
+                                     for t in contents.values())
+
+    def _stage(self, client: int, host_tree: Any, dig: bytes) -> None:
+        """Place one host state into its tier-1 shard and mark the shard
+        dirty (it now differs from its file)."""
+        sid = self.shard_of(client)
+        sh = self._shards.get(sid)
+        if sh is None:
+            sh = self._shards[sid] = {}
+        if client in sh:
+            self._shard_bytes -= _tree_bytes(sh[client])
+        sh[client] = host_tree
+        self._shard_bytes += _tree_bytes(host_tree)
+        self._shards.move_to_end(sid)
+        self._shard_dirty.add(sid)
+        self._staged[client] = dig
+        self._evict_shards()
+
+    def _spill_one(self) -> None:
+        """Evict the LRU tier-0 state.  Clean states drop (their value is
+        already live in a lower tier — never touches disk); dirty states
+        content-digest first and skip the restage when the bytes already
+        match what the lower tiers hold (ISSUE 8 satellite: no redundant
+        rewrite of byte-identical state)."""
+        client, tree = self._mem.popitem(last=False)          # LRU eviction
+        self._mem_bytes -= _tree_bytes(tree)
+        self.stats["spills"] += 1
+        if client not in self._dirty:
+            return
+        self._dirty.discard(client)
+        host_tree = _host_tree(tree)
+        dig = _digest(host_tree)
+        pending = self._staged.get(client)
+        if pending is not None:
+            if pending == dig:                 # staged copy already matches
+                self.stats["skipped_rewrites"] += 1
+                return
+        elif self._digests.get(client) == dig:  # on-disk copy matches
+            self.stats["skipped_rewrites"] += 1
+            return
+        self._stage(client, host_tree, dig)
 
     # ----------------------------------------------------------------- api
     def save(self, client: int, state: Any, keep_device: bool = False) -> None:
@@ -104,7 +247,7 @@ class ClientStateManager:
             f"client {client} not owned by host {self.host}"
         with self._lock:
             if not keep_device:
-                state = jax.tree.map(np.asarray, state)
+                state = _host_tree(state)
             if client in self._mem:
                 self._mem_bytes -= _tree_bytes(self._mem.pop(client))
             self._mem[client] = state
@@ -115,23 +258,59 @@ class ClientStateManager:
                 self._spill_one()
 
     def load(self, client: int, default: Any = None) -> Any:
-        """``Load_State`` in Algorithm 2 (LRU touch)."""
+        """``Load_State`` in Algorithm 2 (LRU touch).  Misses fill from the
+        shard RAM tier, then from the shard file (which stages the whole
+        shard in tier 1 — the read granularity prefetch exploits)."""
         with self._lock:
             if client in self._mem:
                 self.stats["hits"] += 1
                 self._mem.move_to_end(client)
                 return self._mem[client]
-            if client in self._on_disk:
+            sid = self.shard_of(client)
+            sh = self._shards.get(sid)
+            if sh is None or client not in sh:
+                if client in self._disk_clients.get(sid, ()):
+                    self._load_shard(sid)
+                    sh = self._shards.get(sid)
+            if sh is not None and client in sh:
                 self.stats["misses"] += 1
                 self.stats["loads"] += 1
-                tree = self._read(client)
+                tree = sh[client]
+                self._shards.move_to_end(sid)
                 self._mem[client] = tree
                 self._mem_bytes += _tree_bytes(tree)
-                while self.memory_budget and self._mem_bytes > self.memory_budget \
+                while self.memory_budget \
+                        and self._mem_bytes > self.memory_budget \
                         and len(self._mem) > 1:
                     self._spill_one()
+                self._evict_shards()
                 return tree
             return default
+
+    def prefetch(self, clients: Iterable[int]) -> int:
+        """Schedule-keyed look-ahead: stage the shards holding ``clients``
+        into the RAM tier *without* touching the tier-0 LRU, so the
+        upcoming ``load_many`` never reads disk for them.  Returns the
+        number of ids actually staged (already-resident ids cost
+        nothing — prefetched ids never double-load)."""
+        staged = 0
+        with self._lock:
+            for client in clients:
+                client = int(client)
+                if client in self._mem:
+                    continue
+                sid = self.shard_of(client)
+                sh = self._shards.get(sid)
+                if sh is not None and client in sh:
+                    continue
+                if client in self._disk_clients.get(sid, ()):
+                    self._load_shard(sid)
+                    if client in self._shards.get(sid, ()):
+                        staged += 1
+            if staged:
+                self.stats["prefetched"] += staged
+                self._evict_shards()
+        return staged
 
     def save_many(self, states: Dict[int, Any],
                   keep_device: bool = False) -> None:
@@ -158,77 +337,140 @@ class ClientStateManager:
         return out
 
     def __contains__(self, client: int) -> bool:
-        return client in self._mem or client in self._on_disk
+        if client in self._mem:
+            return True
+        sid = self.shard_of(client)
+        return (client in self._shards.get(sid, ())
+                or client in self._disk_clients.get(sid, ()))
 
     def known_clients(self) -> List[int]:
-        return sorted(set(self._mem) | self._on_disk)
+        known = set(self._mem)
+        for sh in self._shards.values():
+            known.update(sh)
+        for clients in self._disk_clients.values():
+            known.update(clients)
+        return sorted(known)
 
     @property
     def memory_bytes(self) -> int:
         return self._mem_bytes
 
+    @property
+    def shard_ram_bytes(self) -> int:
+        return self._shard_bytes
+
     def disk_bytes(self) -> int:
         tot = 0
-        for c in self._on_disk:
+        for sid, clients in self._disk_clients.items():
+            if not clients:
+                continue
             try:
-                tot += os.path.getsize(self._path(c))
+                tot += os.path.getsize(self._shard_path(sid))
             except OSError:
                 pass
         return tot
 
+    def stats_snapshot(self) -> Dict[str, float]:
+        """Cumulative counters plus current tier byte gauges (the
+        ``*_bytes`` keys) — what the server surfaces into
+        ``RoundMetrics.extra["state_manager"]`` each round."""
+        with self._lock:
+            snap: Dict[str, float] = dict(self.stats)
+            snap["mem_bytes"] = self._mem_bytes
+            snap["shard_ram_bytes"] = self._shard_bytes
+            snap["disk_bytes"] = self.disk_bytes()
+            return snap
+
     # -------------------------------------------------------- checkpointing
     def checkpoint(self, ckpt_dir: str) -> None:
-        """Flush dirty states to disk and hard-link the shard into a
-        checkpoint directory (incremental: clean states are only linked)."""
+        """Flush dirty state shard-granularly and hard-link the shard files
+        into a checkpoint directory (incremental: clean shards are only
+        linked, and states byte-identical to their durable copy are not
+        rewritten)."""
         os.makedirs(ckpt_dir, exist_ok=True)
         with self._lock:
-            for client in list(self._dirty):
-                self._write(client, self._mem[client])
+            for client in sorted(self._dirty):
+                host_tree = _host_tree(self._mem[client])
+                dig = _digest(host_tree)
+                pending = self._staged.get(client)
+                if pending is not None:
+                    if pending == dig:
+                        self.stats["skipped_rewrites"] += 1
+                        continue
+                elif self._digests.get(client) == dig:
+                    self.stats["skipped_rewrites"] += 1
+                    continue
+                self._stage(client, host_tree, dig)
             self._dirty.clear()
-            manifest = {"host": self.host, "n_hosts": self.n_hosts,
-                        "clients": sorted(self._on_disk)}
-            for client in self._on_disk:
-                dst = os.path.join(ckpt_dir, f"client_{client}.pkl")
+            for sid in sorted(self._shard_dirty):
+                self._flush_shard(sid)
+            manifest = {
+                "host": self.host, "n_hosts": self.n_hosts,
+                "shard_clients": self.shard_clients,
+                "clients": sorted(
+                    c for cl in self._disk_clients.values() for c in cl),
+                "shards": {str(sid): sorted(cl)
+                           for sid, cl in sorted(self._disk_clients.items())
+                           if cl},
+            }
+            for sid, clients in self._disk_clients.items():
+                if not clients:
+                    continue
+                dst = os.path.join(ckpt_dir,
+                                   os.path.basename(self._shard_path(sid)))
                 if os.path.exists(dst):
                     os.unlink(dst)
                 try:
-                    os.link(self._path(client), dst)
+                    os.link(self._shard_path(sid), dst)
                 except OSError:
-                    shutil.copy2(self._path(client), dst)
+                    shutil.copy2(self._shard_path(sid), dst)
             with open(os.path.join(ckpt_dir, f"state_manifest_{self.host}.json"),
                       "w") as f:
                 json.dump(manifest, f)
+            self._evict_shards()
 
     def restore(self, ckpt_dir: str) -> int:
-        """Re-adopt a checkpointed shard; returns number of clients restored."""
+        """Re-adopt a checkpointed shard set; returns number of clients
+        restored."""
         path = os.path.join(ckpt_dir, f"state_manifest_{self.host}.json")
         if not os.path.exists(path):
             return 0
         with open(path) as f:
             manifest = json.load(f)
-        n = 0
         with self._lock:
             # adopt-exactly: drop any state not in the manifest (a later
             # round's leftovers would otherwise leak into the replay)
             self._mem.clear()
             self._mem_bytes = 0
             self._dirty.clear()
-            for client in list(self._on_disk):
-                if client not in set(manifest["clients"]):
-                    try:
-                        os.unlink(self._path(client))
-                    except OSError:
-                        pass
-            self._on_disk.clear()
-            for client in manifest["clients"]:
-                src = os.path.join(ckpt_dir, f"client_{client}.pkl")
+            self._shards.clear()
+            self._shard_bytes = 0
+            self._shard_dirty.clear()
+            self._digests.clear()
+            self._staged.clear()
+            for sid in list(self._disk_clients):
+                try:
+                    os.unlink(self._shard_path(sid))
+                except OSError:
+                    pass
+            self._disk_clients.clear()
+            self.shard_clients = int(manifest.get("shard_clients",
+                                                  self.shard_clients))
+            n = 0
+            for sid_str, clients in manifest.get("shards", {}).items():
+                sid = int(sid_str)
+                src = os.path.join(ckpt_dir,
+                                   os.path.basename(self._shard_path(sid)))
                 if not os.path.exists(src):
                     continue
-                dst = self._path(client)
-                if os.path.abspath(src) != os.path.abspath(dst):
+                dst = self._shard_path(sid)
+                # checkpoints hard-link shard files, so a restore into the
+                # original spill dir may find dst already IS src (same
+                # inode) — copying onto itself would raise SameFileError
+                if not (os.path.exists(dst) and os.path.samefile(src, dst)):
                     shutil.copy2(src, dst)
-                self._on_disk.add(client)
-                n += 1
+                self._disk_clients[sid] = set(int(c) for c in clients)
+                n += len(clients)
         return n
 
     def rebalance(self, new_n_hosts: int, peers: Dict[int, "ClientStateManager"]) -> int:
@@ -242,15 +484,25 @@ class ClientStateManager:
                     continue
                 state = self.load(client)
                 peers[new_owner].save(client, state)
-                if client in self._mem:
-                    self._mem_bytes -= _tree_bytes(self._mem.pop(client))
-                if client in self._on_disk:
-                    self._on_disk.discard(client)
-                    try:
-                        os.unlink(self._path(client))
-                    except OSError:
-                        pass
-                self._dirty.discard(client)
+                self._discard(client)
                 moved += 1
+            for sid in sorted(self._shard_dirty):
+                self._flush_shard(sid)
         self.n_hosts = new_n_hosts
         return moved
+
+    def _discard(self, client: int) -> None:
+        """Forget one client everywhere (rebalance hand-off)."""
+        if client in self._mem:
+            self._mem_bytes -= _tree_bytes(self._mem.pop(client))
+        self._dirty.discard(client)
+        sid = self.shard_of(client)
+        sh = self._shards.get(sid)
+        if sh is not None and client in sh:
+            self._shard_bytes -= _tree_bytes(sh.pop(client))
+        on_disk = self._disk_clients.get(sid)
+        if on_disk is not None and client in on_disk:
+            on_disk.discard(client)
+            self._shard_dirty.add(sid)   # file must shed the moved entry
+        self._digests.pop(client, None)
+        self._staged.pop(client, None)

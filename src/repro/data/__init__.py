@@ -1,6 +1,8 @@
 from repro.data.partition import (dirichlet_label_partition, natural_sizes,
                                   partition_sizes, quantity_skew_sizes)
-from repro.data.synthetic import make_classification_clients, make_lm_clients
+from repro.data.synthetic import (make_classification_clients,
+                                  make_classification_population,
+                                  make_lm_clients)
 from repro.data.traces import (BehaviorRow, CapacityRow, load_behavior_trace,
                                load_capacity_trace, save_behavior_trace,
                                save_capacity_trace, synthesize_behavior_trace,
@@ -8,7 +10,8 @@ from repro.data.traces import (BehaviorRow, CapacityRow, load_behavior_trace,
 
 __all__ = [
     "dirichlet_label_partition", "natural_sizes", "partition_sizes",
-    "quantity_skew_sizes", "make_classification_clients", "make_lm_clients",
+    "quantity_skew_sizes", "make_classification_clients",
+    "make_classification_population", "make_lm_clients",
     "BehaviorRow", "CapacityRow", "load_behavior_trace",
     "load_capacity_trace", "save_behavior_trace", "save_capacity_trace",
     "synthesize_behavior_trace", "synthesize_capacity_trace",

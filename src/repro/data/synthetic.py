@@ -8,6 +8,11 @@ skew), generated deterministically:
       each client draws from a Dir(α) or natural mixture of class blobs.
   make_lm_clients — token streams from per-client Markov chains (Reddit-like)
       for LM federated training.
+  make_classification_population — the streamed twin of
+      make_classification_clients: an O(M)-words registry (sizes come from
+      the vectorized partition sampler) plus a per-client factory with
+      per-client derived rng streams, wrapped in a LazyPopulation — million-
+      client populations at O(cohort) resident data (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.algorithms import ClientData
+from repro.core.population import LazyPopulation
 from repro.data.partition import dirichlet_label_partition, partition_sizes
 
 
@@ -57,6 +63,57 @@ def make_classification_clients(
             batches.append({"x": xb, "y": yb})
         out[c] = ClientData(batches=batches, n_samples=n)
     return out
+
+
+def _build_classification_client(n: int, mix: np.ndarray, means: np.ndarray,
+                                 batch_size: int, rng: np.random.Generator
+                                 ) -> ClientData:
+    """One client's gaussian-blob batches (shared by the eager generator's
+    twin factory — padding/batching identical to
+    ``make_classification_clients``)."""
+    n_classes, dim = means.shape
+    ys = rng.choice(n_classes, size=n, p=mix)
+    xs = means[ys] + rng.normal(size=(n, dim)).astype(np.float32)
+    batches = []
+    for i in range(0, n, batch_size):
+        xb = xs[i:i + batch_size].astype(np.float32)
+        yb = ys[i:i + batch_size].astype(np.int32)
+        if len(xb) < batch_size:   # pad to fixed shape (jit-friendly)
+            pad = batch_size - len(xb)
+            xb = np.concatenate([xb, xb[:pad] if len(xb) >= pad
+                                 else np.repeat(xb, pad, 0)[:pad]])
+            yb = np.concatenate([yb, yb[:pad] if len(yb) >= pad
+                                 else np.repeat(yb, pad, 0)[:pad]])
+        batches.append({"x": xb, "y": yb})
+    return ClientData(batches=batches, n_samples=n)
+
+
+def make_classification_population(
+        n_clients: int, dim: int = 32, n_classes: int = 10,
+        partition: str = "natural", partition_arg: float = 0.1,
+        mean_samples: int = 64, batch_size: int = 20, seed: int = 0,
+        fetch_cache_bytes: int = 256 << 20) -> LazyPopulation:
+    """Streamed classification population: only the registry (per-client
+    sample counts — one vectorized partition draw) is materialised up
+    front; each client's batches synthesize on demand from a rng stream
+    derived from ``(seed, client_id)``, so any access order (or an eager
+    ``materialize()``) yields identical data.  Dataset memory is bounded by
+    ``fetch_cache_bytes``, independent of ``n_clients``."""
+    means = _blob_means(n_classes, dim, seed)
+    sizes = partition_sizes(partition, n_clients, partition_arg,
+                            mean_samples, seed)
+    alpha = partition_arg if partition == "dirichlet" else 1.0
+
+    def factory(c: int) -> ClientData:
+        rng = np.random.default_rng((seed, 0x5EED, c))
+        mix = rng.dirichlet(np.full(n_classes, alpha))
+        return _build_classification_client(int(sizes[c]), mix, means,
+                                            batch_size, rng)
+
+    return LazyPopulation(sizes, factory,
+                          fetch_cache_bytes=fetch_cache_bytes,
+                          signature=("blobs", dim, n_classes, batch_size),
+                          meta={"seed": seed, "partition": partition})
 
 
 def make_lm_clients(

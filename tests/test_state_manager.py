@@ -110,3 +110,110 @@ def test_rebalance_moves_states_to_new_owners():
             st = mgrs[owner_host(c, 4)].load(c)
             assert st is not None
             np.testing.assert_array_equal(st["c"], _state(c)["c"])
+
+
+# ---------------------------------------------------------------------------
+# sharded tiers (DESIGN.md §11): clean evictions, digest skip, prefetch,
+# budget-independent reads
+# ---------------------------------------------------------------------------
+
+def test_clean_evictions_never_touch_disk():
+    """A tier-0 entry whose value already lives in a lower tier is dropped
+    on eviction without any disk write or re-serialisation."""
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d, memory_budget_bytes=3 * 420)
+        for i in range(12):
+            sm.save(i, _state(i))           # dirty spills -> staged/flushed
+        for i in range(12):                 # promote all through tier 0
+            sm.load(i)
+        writes_before = sm.stats["disk_writes"]
+        spills_before = sm.stats["spills"]
+        for i in range(12):                 # re-walk: clean evictions only
+            sm.load(i)
+        assert sm.stats["spills"] > spills_before
+        assert sm.stats["disk_writes"] == writes_before
+
+
+def test_digest_skip_on_identical_resave():
+    """Re-saving byte-identical state then evicting must not rewrite the
+    shard (skipped_rewrites counts it; disk_writes stays flat)."""
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d, memory_budget_bytes=2 * 420,
+                                shard_clients=4, shard_cache_bytes=1)
+        for i in range(8):
+            sm.save(i, _state(i))
+        sm.checkpoint(os.path.join(d, "ck"))  # flush: all 8 now on disk
+        writes_before = sm.stats["disk_writes"]
+        skips_before = sm.stats["skipped_rewrites"]
+        for i in range(8):
+            sm.save(i, _state(i))           # same value, marked dirty again
+        for i in range(100, 104):
+            sm.save(i, _state(i))           # push the identical ones out
+        assert sm.stats["skipped_rewrites"] >= skips_before + 8
+        # the only new writes may come from the genuinely-new clients
+        assert sm.stats["disk_writes"] <= writes_before + 2
+        # and a changed value is still persisted
+        sm.save(0, _state(999))
+        np.testing.assert_array_equal(sm.load(0)["c"], _state(999)["c"])
+
+
+def test_prefetch_avoids_disk_loads():
+    """prefetch() stages whole shards into host RAM; the following
+    load_many serves from the shard tier with zero new disk reads."""
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d, memory_budget_bytes=2 * 420,
+                                shard_clients=4)
+        sm.save_many({i: _state(i) for i in range(16)})
+        sm.checkpoint(os.path.join(d, "ck"))   # flush -> everything on disk
+        # fresh manager over the same spill dir: cold tiers
+        sm2 = ClientStateManager(d, memory_budget_bytes=2 * 420,
+                                 shard_clients=4, shard_cache_bytes=1 << 20)
+        sm2.restore(os.path.join(d, "ck"))
+        cohort = [2, 5, 9, 14]
+        staged = sm2.prefetch(cohort)
+        assert staged > 0
+        disk_loads = sm2.stats["disk_loads"]
+        out = sm2.load_many(cohort)
+        for c, st in zip(cohort, out):
+            np.testing.assert_array_equal(st["c"], _state(c)["c"])
+        assert sm2.stats["disk_loads"] == disk_loads  # no double-loads
+        assert sm2.stats["prefetched"] == staged
+
+
+def test_reads_identical_across_memory_budgets():
+    """The same save/load_many sequence must return bit-identical states
+    whether the budget forces heavy spilling or none at all — with and
+    without prefetch in the loop."""
+    def run(budget, use_prefetch):
+        d = tempfile.mkdtemp(prefix="smb_")
+        sm = ClientStateManager(d, memory_budget_bytes=budget,
+                                shard_clients=4)
+        rng = np.random.default_rng(0)
+        out = []
+        for step in range(6):
+            cohort = sorted(int(c) for c in
+                            rng.choice(24, size=8, replace=False))
+            if use_prefetch:
+                sm.prefetch(cohort)
+            loaded = sm.load_many(cohort, default=None)
+            sm.save_many({c: _state(c * 31 + step) for c in cohort})
+            out.append([(st["c"].tobytes(), int(st["step"]))
+                        for st in loaded if st is not None])
+        return out
+
+    baseline = run(1 << 30, use_prefetch=False)
+    for budget in (420, 3 * 420, 10 * 420):
+        for pf in (False, True):
+            assert run(budget, pf) == baseline
+
+
+def test_shard_files_bounded_by_shard_count():
+    """No per-client inodes: M clients across shards of S produce at most
+    ceil(M/S) shard files."""
+    with tempfile.TemporaryDirectory() as d:
+        sm = ClientStateManager(d, memory_budget_bytes=420,
+                                shard_clients=16)
+        sm.save_many({i: _state(i) for i in range(100)})
+        sm.checkpoint(os.path.join(d, "ck"))
+        files = [f for f in os.listdir(d) if f.endswith(".pkl")]
+        assert 0 < len(files) <= -(-100 // 16)
