@@ -9,6 +9,18 @@ rounds — and a lognormal (heavy-tailed, FedScale-like) population is
 slower than a uniform one of the same median because the barrier waits on
 the bottleneck link.
 
+Adaptive control plane (ISSUE 9, DESIGN.md §12): the constrained-uplink
+(lognormal) population re-runs semi-sync and async under
+``ControlPlane.observer()`` vs an adaptive plane, on ``TickTimer`` spans so
+the rows reproduce bit-exactly.  This cell is comm-bound: the oracle prices
+comm serially, so the DES engines — whose uploads overlap compute — already
+beat it and the observer gap is *negative*; the ``gap_closure`` row then
+reports 100 (no positive gap left to close) and the interesting deltas are
+makespan and loss, carried in the derived fields.  The async cell uses an
+overlap-only plane: measured here, the λ controller raises λ off its
+low-staleness EWMA and costs ~18% loss, and queue re-packing reorders folds
+for no makespan win — neither earns its keep when comm dominates compute.
+
 ``BENCH_NETWORK_ROUNDS`` overrides the round count (CI smoke runs few).
 """
 import os
@@ -16,7 +28,7 @@ import os
 import numpy as np
 
 from benchmarks import common
-from repro.core import ClientAvailability, NetworkModel
+from repro.core import ClientAvailability, ControlPlane, NetworkModel, TickTimer
 from repro.core.compression import make_compressor
 from repro.data import synthesize_capacity_trace
 
@@ -30,6 +42,17 @@ MEDIAN_KBPS = 40.0          # constrained last-mile uplink: comm-bound rounds
 COMPRESSORS = [("none", lambda: None),
                ("topk", lambda: make_compressor("topk", 0.05)),
                ("int8", lambda: make_compressor("int8"))]
+
+# adaptive grid: engine opts + the control plane that suits a comm-bound
+# population (see module docstring for why async drops λ-tuning/re-pack)
+ADAPTIVE_CELLS = [
+    ("semi_sync", "semi-sync",
+     {"deadline_frac": 0.55, "over_select": 1.2, "chunk_size": 4},
+     ControlPlane.adaptive),
+    ("async", "async",
+     {"staleness_lambda": 0.5, "chunk_size": 8},
+     lambda: ControlPlane(overlap_comm=True)),
+]
 
 
 def _net(dist: str) -> NetworkModel:
@@ -52,6 +75,21 @@ def _run(dist: str, comp_name: str, make_comp, availability=None):
             / 1024.0),
         "dropped": float(np.sum(
             [m.extra.get("dropped_clients", 0.0) for m in hist])),
+    }
+
+
+def _run_gap(engine, opts, control):
+    # deterministic cell (TickTimer spans, real DES comm pricing)
+    srv = common.build_server(
+        n_clients=N_CLIENTS, clients_per_round=CLIENTS_PER_ROUND, K=K,
+        scheduler="parrot", warmup_rounds=2, network=_net("lognormal"),
+        round_engine=engine, engine_opts=dict(opts), control=control,
+        timer=TickTimer(1.0))
+    hist = [srv.run_round() for _ in range(ROUNDS)]
+    return {
+        "gap_pct": common.gap_to_oracle_pct(hist, skip=SKIP),
+        "makespan_s": float(np.mean([m.makespan for m in hist][SKIP:])),
+        "loss": common.eval_loss(srv),
     }
 
 
@@ -79,3 +117,25 @@ def run() -> None:
     r = _run("lognormal", "none", lambda: None, availability=av)
     common.emit("network/lognormal/diurnal/makespan", r["makespan_s"] * 1e6,
                 f"dropped_total={r['dropped']:.0f}")
+
+    # adaptive control on the constrained-uplink cell (ISSUE 9)
+    for name, engine, opts, make_ctrl in ADAPTIVE_CELLS:
+        base = _run_gap(engine, opts, ControlPlane.observer())
+        common.emit(f"network/{name}/gap_to_oracle", base["gap_pct"],
+                    f"gap_to_oracle_pct={base['gap_pct']:.1f} "
+                    f"makespan_s={base['makespan_s']:.2f} "
+                    f"loss={base['loss']:.4f}")
+        r = _run_gap(engine, opts, make_ctrl())
+        dloss = 100.0 * (r["loss"] - base["loss"]) / max(base["loss"], 1e-12)
+        common.emit(f"network/{name}/adaptive/gap_to_oracle", r["gap_pct"],
+                    f"gap_to_oracle_pct={r['gap_pct']:.1f} "
+                    f"makespan_s={r['makespan_s']:.2f} "
+                    f"loss={r['loss']:.4f} loss_delta_pct={dloss:+.2f}")
+        closure = 100.0 * (1.0 - max(r["gap_pct"], 0.0)
+                           / max(base["gap_pct"], 1e-12))
+        note = ("observer already beats the serial-comm oracle; "
+                "no positive gap to close" if base["gap_pct"] <= 0.0 else "")
+        common.emit(f"network/{name}/adaptive/gap_closure", closure,
+                    f"observer_gap_pct={base['gap_pct']:.1f} "
+                    f"adaptive_gap_pct={r['gap_pct']:.1f} "
+                    f"closure_pct={closure:.1f} {note}".rstrip())

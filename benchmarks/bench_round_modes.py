@@ -6,6 +6,15 @@ wins can't hide convergence regressions.
 Acceptance targets (ISSUE 3): async mean makespan >= 25% below bsp while
 its final-round eval loss stays within 5% of the BSP run's.
 
+Adaptive control plane (ISSUE 9, DESIGN.md §12): a second, deterministic
+grid (``TickTimer`` spans, so the rows reproduce bit-exactly run to run)
+compares ``ControlPlane.observer()`` — behaviour-identical to no control,
+oracle tracking on — against ``ControlPlane.adaptive()`` for semi-sync and
+async.  ``gap_to_oracle`` rows report how far each cell sits from the
+hindsight-optimal LPT schedule of the work it actually folded, and
+``gap_closure`` rows how much of the observer's gap the adaptive
+controllers recover (the PR's acceptance metric).
+
 ``BENCH_ROUND_MODES_ROUNDS`` overrides the round count (CI smoke runs few).
 """
 import os
@@ -14,6 +23,7 @@ import time
 import numpy as np
 
 from benchmarks import common
+from repro.core import ControlPlane, TickTimer
 from repro.core.executor import dynamic_env
 
 ROUNDS = int(os.environ.get("BENCH_ROUND_MODES_ROUNDS", "16"))
@@ -28,12 +38,31 @@ MODES = [
     ("async", "async", {"staleness_lambda": 0.5, "chunk_size": 8}),
 ]
 
+# the deterministic oracle-gap grid gets its own opts: chunk 2 keeps the
+# deadline cut fine-grained, the 0.75 static frac is the same landing
+# quantile the adaptive cell's controller targets (so observer vs adaptive
+# compares control, not landing volume), and target_ratio 0.75 sits just
+# below what stealing achieves under this cell's dynamic heterogeneity —
+# the 1/over_select default assumes no straggler shave at all
+GAP_MODES = [
+    ("bsp", "bsp", {}, None),
+    ("semi_sync", "semi-sync",
+     {"deadline_frac": 0.75, "over_select": 1.2, "chunk_size": 2},
+     lambda: ControlPlane.adaptive(target_ratio=0.75)),
+    ("async", "async", {"staleness_lambda": 0.5, "chunk_size": 8},
+     ControlPlane.adaptive),
+]
 
-def _run_mode(engine, opts):
-    srv = common.build_server(
+
+def _build(engine, opts, control=None, timer=None):
+    return common.build_server(
         n_clients=160, clients_per_round=CLIENTS_PER_ROUND, K=K,
         speed_model=dynamic_env(K, ROUNDS), warmup_rounds=2,
-        round_engine=engine, engine_opts=opts)
+        round_engine=engine, engine_opts=opts, control=control, timer=timer)
+
+
+def _run_mode(engine, opts):
+    srv = _build(engine, opts)
     t0 = time.perf_counter()
     metrics = [srv.run_round() for _ in range(ROUNDS)]
     wall = time.perf_counter() - t0
@@ -43,6 +72,17 @@ def _run_mode(engine, opts):
         "wall_s": wall,
         "loss": common.eval_loss(srv),
         "trips": int(np.mean([m.comm_trips for m in metrics])),
+    }
+
+
+def _run_gap(engine, opts, control):
+    # deterministic cell: TickTimer spans make the gap metric reproducible
+    # (the wall-clock cells above keep the real timer for continuity)
+    srv = _build(engine, opts, control=control, timer=TickTimer(1.0))
+    metrics = [srv.run_round() for _ in range(ROUNDS)]
+    return {
+        "gap_pct": common.gap_to_oracle_pct(metrics, skip=SKIP),
+        "loss": common.eval_loss(srv),
     }
 
 
@@ -63,3 +103,25 @@ def run() -> None:
         common.emit(f"round_modes/{name}/vs_bsp", red,
                     f"makespan_reduction_pct={red:.1f} "
                     f"loss_delta_pct={dloss:+.2f}")
+
+    # adaptive control plane vs the observer baseline (ISSUE 9): the
+    # gap_closure row is the acceptance metric on this cell
+    for name, engine, opts, make_ctrl in GAP_MODES:
+        base = _run_gap(engine, opts, ControlPlane.observer())
+        common.emit(f"round_modes/{name}/gap_to_oracle", base["gap_pct"],
+                    f"gap_to_oracle_pct={base['gap_pct']:.1f} "
+                    f"loss={base['loss']:.4f}")
+        if name == "bsp":
+            continue                 # no adaptive lever moves comm-free bsp
+        r = _run_gap(engine, opts, make_ctrl())
+        dloss = 100.0 * (r["loss"] - base["loss"]) / max(base["loss"], 1e-12)
+        common.emit(f"round_modes/{name}/adaptive/gap_to_oracle",
+                    r["gap_pct"],
+                    f"gap_to_oracle_pct={r['gap_pct']:.1f} "
+                    f"loss={r['loss']:.4f} loss_delta_pct={dloss:+.2f}")
+        closure = 100.0 * (1.0 - max(r["gap_pct"], 0.0)
+                           / max(base["gap_pct"], 1e-12))
+        common.emit(f"round_modes/{name}/adaptive/gap_closure", closure,
+                    f"observer_gap_pct={base['gap_pct']:.1f} "
+                    f"adaptive_gap_pct={r['gap_pct']:.1f} "
+                    f"closure_pct={closure:.1f}")

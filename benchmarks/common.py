@@ -71,7 +71,7 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                  warmup_rounds=1, round_engine="bsp",
                  engine_opts=None, network=None,
                  availability=None, faults=None, retry=None,
-                 timer=None) -> ParrotServer:
+                 timer=None, control=None) -> ParrotServer:
     data = make_classification_clients(
         n_clients, dim=32, n_classes=10, partition=partition,
         partition_arg=partition_arg, mean_samples=60, batch_size=20,
@@ -88,7 +88,7 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                         warmup_rounds=warmup_rounds, compressor=compressor,
                         round_engine=round_engine, engine_opts=engine_opts,
                         network=network, availability=availability,
-                        faults=faults, retry=retry,
+                        faults=faults, retry=retry, control=control,
                         seed=seed)
 
 
@@ -107,3 +107,17 @@ def eval_loss(server: ParrotServer) -> float:
 def mean_makespan(server: ParrotServer, rounds: int, skip: int = 2) -> float:
     ms = [server.run_round().makespan for _ in range(rounds)]
     return float(np.mean(ms[skip:]))
+
+
+def gap_to_oracle_pct(metrics, skip: int = 0) -> float:
+    """Mean % excess of the realized makespan over the hindsight-optimal
+    LPT re-pack of the same folded work (``extra["oracle_makespan"]``,
+    DESIGN.md §12; requires a non-None ``control=``).  Can go slightly
+    negative: the oracle prices comm serially and models compute as
+    n·rate, so an overlapped or constant-per-chunk schedule may beat it."""
+    gaps = []
+    for m in metrics[skip:]:
+        oracle = m.extra.get("oracle_makespan", 0.0)
+        if oracle > 0.0:
+            gaps.append(100.0 * (m.makespan - oracle) / oracle)
+    return float(np.mean(gaps)) if gaps else 0.0

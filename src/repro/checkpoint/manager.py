@@ -103,6 +103,12 @@ class CheckpointManager:
                 "faults": (server.faults.state_dict()
                            if getattr(server, "faults", None) is not None
                            else None),
+                # adaptive control-plane state (λ / deadline controller
+                # values + EWMAs): a resumed run must replay the same
+                # controller trajectory bit-exactly (DESIGN.md §12)
+                "control": (server.control.state_dict()
+                            if getattr(server, "control", None) is not None
+                            else None),
                 # compressor state (top-k error-feedback residuals, PowerSGD
                 # P/Q warm starts): without it a resume under compression
                 # silently diverges from the uninterrupted run.  hasattr-
@@ -186,6 +192,8 @@ class CheckpointManager:
         server.engine.load_state_dict(blob.get("engine"))
         if getattr(server, "faults", None) is not None:
             server.faults.load_state_dict(blob.get("faults"))
+        if getattr(server, "control", None) is not None:
+            server.control.load_state_dict(blob.get("control"))
         if getattr(server, "compressor", None) is not None \
                 and hasattr(server.compressor, "load_state_dict"):
             server.compressor.load_state_dict(blob.get("compressor"))

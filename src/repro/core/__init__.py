@@ -17,9 +17,14 @@
   compression.py             — delta compression (top-k EF / int8)
   faults.py                  — fault injection & recovery (seeded chaos
                                plans, chunk timeouts/retry, §10)
+  control.py                 — adaptive control plane (self-tuning λ /
+                               deadline controllers, comm overlap, gang
+                               waves, oracle-gap tracking, §12)
 """
 from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
                                     flat_aggregate, global_aggregate)
+from repro.core.control import (AsyncLambdaController, ControlPlane,
+                                DeadlineController)
 from repro.core.flat import FlatLayout
 from repro.core.algorithms import (ALGORITHMS, ClientData, FLAlgorithm,
                                    make_algorithm)
@@ -34,15 +39,18 @@ from repro.core.network import (ClientAvailability, CommEvent, LinkProfile,
                                 NetworkModel)
 from repro.core.placement import DevicePlacement
 from repro.core.round import ParrotServer, RoundMetrics, run_flat_reference
-from repro.core.scheduler import ClientTask, ParrotScheduler, Schedule
+from repro.core.scheduler import (ClientTask, ParrotScheduler, Schedule,
+                                  oracle_makespan, rebalance_queues)
 from repro.core.state_manager import ClientStateManager, owner_host
-from repro.core.workload import RunRecord, WorkloadEstimator, WorkloadModel
+from repro.core.workload import (RunRecord, WorkloadEstimator,
+                                 WorkloadModel, fleet_average)
 
 __all__ = [
-    "ALGORITHMS", "AsyncEngine", "BSPEngine", "ClientAvailability",
+    "ALGORITHMS", "AsyncEngine", "AsyncLambdaController", "BSPEngine",
+    "ClientAvailability",
     "ClientData", "ClientResult",
     "ClientStateManager", "ClientStepEngine", "ClientTask", "CommEvent",
-    "DevicePlacement",
+    "ControlPlane", "DeadlineController", "DevicePlacement",
     "FLAlgorithm", "FaultEvent", "FaultInjector", "FaultPlan",
     "FlatLayout", "LinkProfile", "LocalAggregator", "NetworkModel", "Op",
     "ParrotScheduler",
@@ -50,6 +58,8 @@ __all__ = [
     "RoundEngine", "RoundMetrics", "RunRecord", "Schedule",
     "SemiSyncEngine", "SequentialExecutor", "TickTimer", "VirtualClock",
     "WorkloadEstimator", "WorkloadModel",
-    "engine_for", "flat_aggregate", "global_aggregate", "make_algorithm",
-    "make_engine", "owner_host", "run_flat_reference",
+    "engine_for", "flat_aggregate", "fleet_average", "global_aggregate",
+    "make_algorithm",
+    "make_engine", "oracle_makespan", "owner_host", "rebalance_queues",
+    "run_flat_reference",
 ]

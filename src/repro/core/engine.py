@@ -63,9 +63,10 @@ from repro.core.clock import VirtualClock
 from repro.core.executor import ExecutorFailure, ExecutorReport
 from repro.core.faults import FaultCounters, scale_report
 from repro.core.network import CommEvent
-from repro.core.scheduler import (ClientTask, Schedule, pick_steal_victim,
-                                  predict_remaining, predict_span,
-                                  prefetch_ids)
+from repro.core.scheduler import (ClientTask, Schedule, oracle_makespan,
+                                  pick_steal_victim, predict_remaining,
+                                  predict_span, prefetch_ids,
+                                  rebalance_queues)
 from repro.core.workload import RunRecord
 
 
@@ -189,8 +190,8 @@ class _NetSim:
 
     def push_chunk(self, clock: VirtualClock, rep: ExecutorReport,
                    start: float, done_data, record, version: int,
-                   fi=None, counters: Optional[FaultCounters] = None
-                   ) -> float:
+                   fi=None, counters: Optional[FaultCounters] = None,
+                   overlap_from: Optional[float] = None) -> float:
         """Push one completed chunk's comm-priced event pair: ``chunk_done``
         at download+compute (the executor frees; ``done_data`` is the
         engine's handler payload) and — when the chunk did work — a
@@ -203,8 +204,20 @@ class _NetSim:
         (each re-send re-priced through the network model), then mid-upload
         client dropout; a payload lost in transit surfaces as an
         ``upload_lost`` event so each engine routes the clients into its
-        own re-run pool.  ``fi=None`` keeps the pricing bit-exact."""
-        t_c = start + self.down(rep.completed_clients) + rep.virtual_time
+        own re-run pool.  ``fi=None`` keeps the pricing bit-exact.
+
+        ``overlap_from`` (DESIGN.md §12, ``control.overlap_comm``): the
+        virtual time the chunk's payload version was broadcast.  The
+        clients' download then overlaps whatever the executor computed
+        since — the chunk starts at ``max(start, overlap_from + download)``
+        instead of serializing the download into its span.  ``None`` keeps
+        the serial pricing bit-exact (the ``down`` read is accounted
+        identically either way)."""
+        down_s = self.down(rep.completed_clients)
+        if overlap_from is None:
+            t_c = start + down_s + rep.virtual_time
+        else:
+            t_c = max(start, overlap_from + down_s) + rep.virtual_time
         clock.push(t_c, "chunk_done", done_data)
         if rep.n_tasks:
             wirep, nb = self.ship(rep.executor, rep.partial)
@@ -350,6 +363,57 @@ class RoundEngine:
         return RunRecord(round=rnd, client=rep.completed_clients[0],
                          executor=rep.executor, n_samples=n,
                          time=rep.virtual_time, n_tasks=rep.n_tasks)
+
+    @staticmethod
+    def _ctrl(srv):
+        """The server's control plane (DESIGN.md §12), or None — in which
+        case every controller hook below is skipped bit-exactly."""
+        return getattr(srv, "control", None)
+
+    def _gang_wave(self, srv, rnd: int, states: Dict[int, _ExecState],
+                   clock: VirtualClock, payload: Dict, chunk: int,
+                   candidates: List[int], mk_done) -> Set[int]:
+        """SPMD gang dispatch of one aligned DES chunk wave (DESIGN.md §12,
+        ``control.gang_waves``): when every idle candidate owns a head chunk
+        and the wave gangs (one executor per device, homogeneous block
+        signatures — ``run_queues_ganged``'s gates), the wave runs as ONE
+        sharded execution and each report is consumed immediately: the
+        chunk's ``chunk_done`` event is pushed here, exactly as the serial
+        ``_dispatch_next`` would, so later queue mutations (steals,
+        failures) can never orphan a pre-executed report.  Returns the
+        ganged ids — the caller's serial dispatch loop skips them.  Gated
+        to the comm-transparent fault-free configuration; under the
+        deterministic tick timer the ganged reports are bit-identical to
+        the serial path's."""
+        if not (srv.gang_dispatch and srv.placement is not None
+                and srv.faults is None):
+            return set()
+        ready = [k for k in candidates
+                 if not states[k].inflight and not states[k].dead
+                 and not states[k].stopped and states[k].queue]
+        if len(ready) < 2:
+            return set()
+        from repro.core.executor import run_queues_ganged
+        heads = {k: states[k].queue[:chunk] for k in ready}
+        reports = run_queues_ganged(srv.executors, rnd, heads, payload,
+                                    srv.data_by_client, srv.placement)
+        if reports is None:
+            return set()
+        ganged: Set[int] = set()
+        for k in ready:
+            es, rep = states[k], reports[k]
+            es.queue = es.queue[len(heads[k]):]
+            start = max(es.t, clock.now)
+            es.offset += len(heads[k])
+            es.inflight = True
+            if es.queue and srv.algorithm.stateful:
+                sm = srv.executors[k].state_manager
+                if sm is not None:
+                    sm.prefetch(prefetch_ids(es.queue, chunk))
+            es.busy_until = start + rep.virtual_time
+            clock.push(es.busy_until, "chunk_done", mk_done(k, rep))
+            ganged.add(k)
+        return ganged
 
     def _fail_over(self, srv, states: Dict[int, _ExecState], dead: int,
                    remaining: List[ClientTask]) -> List[int]:
@@ -520,17 +584,27 @@ class BSPEngine(RoundEngine):
         # must see the server's virtual clock at this round's END (or the
         # next cohort's availability would be filtered at its start)
         fi = srv.faults
+        ctrl = self._ctrl(srv)
         kept = reports
         if netsim is None:
             makespan = max((r.virtual_time for r in reports), default=0.0)
         elif fi is None:
-            # the barrier waits on comm events: each executor's span is
-            # broadcast-download + compute + partial-upload (the upload at
-            # the achieved wire size measured when the partial shipped)
-            makespan = max(
-                (netsim.down(r.completed_clients) + r.virtual_time
-                 + netsim.up(r.completed_clients, r.wire_bytes)
-                 for r in reports), default=0.0)
+            if ctrl is not None and ctrl.overlap_comm:
+                # comm/compute overlap (DESIGN.md §12): the payload exists
+                # at the barrier's start, so each client's download runs
+                # concurrently with the lane's earlier COMPUTE — task j
+                # starts at max(t_{j-1}, down_j) instead of after a serial
+                # queue-bottleneck download
+                makespan = self._overlap_span(netsim, reports)
+            else:
+                # the barrier waits on comm events: each executor's span is
+                # broadcast-download + compute + partial-upload (the upload
+                # at the achieved wire size measured when the partial
+                # shipped)
+                makespan = max(
+                    (netsim.down(r.completed_clients) + r.virtual_time
+                     + netsim.up(r.completed_clients, r.wire_bytes)
+                     for r in reports), default=0.0)
         else:
             # fault-priced upload leg: blackout pauses + chunk timeout with
             # backed-off re-sends, then mid-upload dropout.  A payload that
@@ -591,6 +665,21 @@ class BSPEngine(RoundEngine):
             srv.estimator.record_many(records)
         stats = srv.comm.stats.reset()
         extra = {"backup_tasks": float(n_backups)}
+        if ctrl is not None:
+            # hindsight-optimal repack of the realized per-task spans (the
+            # benchmarks' gap_to_oracle_pct denominator); comm priced per
+            # client off the network model, unaccounted
+            jobs = []
+            for r in reports:
+                for rec in r.records:
+                    c = 0.0
+                    if netsim is not None and netsim.net is not None:
+                        c = netsim.net.client_comm_time(
+                            rec.client, netsim.payload_nbytes,
+                            int(netsim.payload_nbytes * srv._wire_ratio))
+                    jobs.append((rec.n_samples, rec.time, rec.executor, c))
+            extra["oracle_makespan"] = oracle_makespan(
+                jobs, list(srv.executors))
         if remapped:
             extra["remapped_tasks"] = float(remapped)
         if netsim is not None:
@@ -620,6 +709,32 @@ class BSPEngine(RoundEngine):
         return metrics
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _overlap_span(netsim: _NetSim, reports: List[ExecutorReport]
+                      ) -> float:
+        """Barrier span with per-client downloads overlapping the lane's
+        earlier compute (DESIGN.md §12): task j starts at
+        ``max(t_{j-1}, down_j)`` — the fold over the report's per-task
+        records — then the partial's upload closes the lane.  The serial
+        branch's accounted ``netsim.down`` call is preserved once per
+        report (the per-client reads here are unaccounted), so
+        ``comm_time_down`` matches the serial branch exactly; only the
+        makespan moves."""
+        span = 0.0
+        for r in reports:
+            d_acc = netsim.down(r.completed_clients)   # accounting parity
+            if r.n_tasks and netsim.net is not None:
+                t = 0.0
+                for rec in r.records:
+                    d = netsim.net.download_time([rec.client],
+                                                 netsim.payload_nbytes)
+                    t = max(t, d) + rec.time
+            else:
+                t = d_acc + r.virtual_time
+            span = max(span, t + netsim.up(r.completed_clients,
+                                           r.wire_bytes))
+        return span
+
     def _plan_drops(self, srv, schedule: Schedule, netsim: _NetSim
                     ) -> Tuple[Dict[int, Set[int]], Set[int]]:
         """Clients predicted to leave before their queue position completes
@@ -856,6 +971,7 @@ class SemiSyncEngine(RoundEngine):
         self.chunk_size = chunk_size
         self.quorum_frac = float(quorum_frac)
         self._carry: List[ClientTask] = []
+        self._round_steals = 0      # within-round only (ctrl.rebalance)
 
     # -- checkpointing: the carry pool is the only cross-round state -------
     def state_dict(self) -> Dict:
@@ -927,20 +1043,36 @@ class SemiSyncEngine(RoundEngine):
                       else fi.scaled_model(models.get(k), k, abs0),
                       schedule.queue(k), chunk, comm_pred)
                   for k in live), default=0.0)
-        deadline = self.deadline_frac * pm if pm > 0.0 else float("inf")
+        ctrl = self._ctrl(srv)
+        frac = self.deadline_frac
+        if ctrl is not None and ctrl.deadline is not None:
+            # self-tuned deadline fraction (DESIGN.md §12): the controller
+            # converges the landed/selected ratio to its target quantile
+            frac = ctrl.deadline.current(self.deadline_frac)
+        deadline = frac * pm if pm > 0.0 else float("inf")
 
         clock = VirtualClock()
         states = {k: _ExecState(queue=list(schedule.queue(k))) for k in live}
         partials: List[Dict] = []
         records: List[RunRecord] = []
+        oracle_jobs: List[Tuple[float, float, int, float]] = []
         n_landed = 0
         n_failed = 0
+        self._round_steals = 0
         committed = False       # quorum reached: queues drained to carry
         quorum_t = 0.0
         t_hi = 0.0              # latest processed event (network makespan)
+        ganged: Set[int] = set()
+        if ctrl is not None and ctrl.gang_waves and netsim is None:
+            # first-wave gang: at round start every first chunk is exempt
+            # from the deadline check, matching the serial dispatch exactly
+            ganged = self._gang_wave(srv, rnd, states, clock, payload,
+                                     chunk, live, lambda k, rep: (k, rep))
         for k in live:
-            self._dispatch_next(srv, rnd, k, states, clock, payload, models,
-                                deadline, chunk, netsim, counters)
+            if k not in ganged:
+                self._dispatch_next(srv, rnd, k, states, clock, payload,
+                                    models, deadline, chunk, netsim,
+                                    counters)
         while clock:
             ev = clock.pop()
             t_hi = max(t_hi, ev.time)
@@ -988,6 +1120,14 @@ class SemiSyncEngine(RoundEngine):
                     partials.append(ce.partial)
                     if ce.record is not None:
                         records.append(ce.record)
+                        if ctrl is not None:
+                            oracle_jobs.append((
+                                ce.record.n_samples, ce.record.time,
+                                ce.record.executor,
+                                netsim.net.chunk_comm_time(
+                                    list(ce.completed_clients),
+                                    netsim.payload_nbytes, ce.wire_bytes)
+                                if netsim.net is not None else 0.0))
                     n_landed += ce.n_tasks
                     if fi is not None:
                         fi.clear_retries(ce.completed_clients)
@@ -1051,6 +1191,26 @@ class SemiSyncEngine(RoundEngine):
         extra = {"landed_clients": float(n_landed),
                  "carried_tasks": float(len(self._carry)),
                  "deadline": deadline}
+        if ctrl is not None:
+            extra["deadline_frac"] = frac
+            if netsim is None:
+                # comm-transparent folds all land at chunk_done: the round's
+                # records ARE the realized jobs (comm = 0)
+                oracle_jobs = [(r.n_samples, r.time, r.executor, 0.0)
+                               for r in records]
+            extra["oracle_makespan"] = oracle_makespan(
+                oracle_jobs, list(srv.executors))
+            if ctrl.rebalance:
+                extra["rebalanced_tasks"] = float(self._round_steals)
+            if ctrl.deadline is not None and deadline != float("inf"):
+                # one controller step per round, from this round's observed
+                # landed/selected ratio (applies from the NEXT round); warmup
+                # rounds (no workload model -> deadline ∞ -> everything
+                # lands) carry no signal and would bias the EWMA toward
+                # tightening, so they are skipped
+                ctrl.deadline.update(n_landed, len(tasks),
+                                     self.deadline_frac,
+                                     1.0 / self.over_select)
         if netsim is not None:
             extra.update(netsim.extra())
             if makespan <= 0.0 and n_landed == 0:
@@ -1085,7 +1245,17 @@ class SemiSyncEngine(RoundEngine):
         fi = srv.faults
         abs0 = netsim.t0 if netsim is not None else srv.virtual_now
         es = states[k]
-        while es.queue and not es.stopped and not es.dead:
+        ctrl = self._ctrl(srv)
+        while True:
+            if not es.queue and not es.stopped and not es.dead \
+                    and ctrl is not None and ctrl.rebalance:
+                # deadline-aware work stealing (DESIGN.md §12): a drained
+                # lane takes the predicted-straggler's tail chunk instead
+                # of idling out the deadline; the stolen chunk still faces
+                # the per-chunk deadline check below on the thief's clock
+                self._steal_next(k, states, models, chunk, netsim)
+            if not es.queue or es.stopped or es.dead:
+                return
             next_chunk = es.queue[:chunk]
             start = max(es.t, clock.now)
             comm_pred = netsim.comm_pred if netsim is not None else None
@@ -1185,11 +1355,36 @@ class SemiSyncEngine(RoundEngine):
             # comm-priced chunk: the executor is busy for download +
             # compute, then free — the upload overlaps its next chunk and
             # lands as its own arrival event, which is when the fold counts
+            ctrl = self._ctrl(srv)
             es.busy_until = netsim.push_chunk(
                 clock, rep, start, (k, rep),
                 self._chunk_record(srv, rnd, rep), version=rnd,
-                fi=fi, counters=counters)
+                fi=fi, counters=counters,
+                # the round's payload was broadcast at local t=0: with
+                # overlap_comm on, the download runs concurrently with the
+                # lane's earlier chunks instead of serializing into this one
+                overlap_from=(0.0 if ctrl is not None and ctrl.overlap_comm
+                              else None))
             return
+
+    def _steal_next(self, k, states, models, chunk, netsim) -> None:
+        """Move the predicted-straggler's tail chunk onto drained lane
+        ``k`` (``ctrl.rebalance``; same victim policy as the async engine's
+        steal).  Deterministic: victim choice and the moved slice depend
+        only on the queues and fitted models."""
+        queues = {j: es.queue for j, es in states.items()
+                  if not es.stopped and not es.dead}
+        avail = {j: max(states[j].t, states[j].busy_until) for j in queues}
+        victim = pick_steal_victim(
+            queues, avail, models, k, chunk,
+            netsim.comm_pred if netsim is not None else None)
+        if victim is None:
+            return
+        vq = states[victim].queue
+        take = max(1, min(chunk, len(vq)))
+        states[k].queue = vq[-take:]
+        states[victim].queue = vq[:-take]
+        self._round_steals += 1
 
 
 # ---------------------------------------------------------------------------
@@ -1227,6 +1422,9 @@ class AsyncEngine(RoundEngine):
         self._in_system: Set[int] = set()
         self._last_update_t = 0.0
         self._last_sched: Optional[Schedule] = None
+        # virtual time the live payload version was broadcast (the comm
+        # overlap anchor: a chunk's download can start no earlier)
+        self._payload_t = 0.0
         self._reset_window()
 
     def _reset_window(self) -> None:
@@ -1239,6 +1437,11 @@ class AsyncEngine(RoundEngine):
         self._stale_folds = 0
         self._stale_sum = 0.0
         self._counters = FaultCounters()
+        # control-plane accumulators (inert without a control plane): the
+        # window's realized (n, t, executor, comm) jobs for the oracle, and
+        # tasks moved by the commit-tail queue rebalance
+        self._oracle_jobs: List[Tuple[float, float, int, float]] = []
+        self._rebalance_moved = 0
 
     # -- checkpointing of the in-flight pipeline ---------------------------
     # The engine persists across rounds, so a checkpoint taken at an update
@@ -1289,6 +1492,9 @@ class AsyncEngine(RoundEngine):
             "stale_sum": self._stale_sum,
             "counters": vars(self._counters).copy(),
             "last_sched": self._last_sched,
+            "payload_t": self._payload_t,
+            "oracle_jobs": [tuple(j) for j in self._oracle_jobs],
+            "rebalance_moved": self._rebalance_moved,
         }
 
     def load_state_dict(self, state: Optional[Dict]) -> None:
@@ -1314,6 +1520,10 @@ class AsyncEngine(RoundEngine):
         self._stale_sum = state["stale_sum"]
         self._counters = FaultCounters(**state.get("counters", {}))
         self._last_sched = state["last_sched"]
+        # control-plane state (absent in pre-control checkpoints)
+        self._payload_t = state.get("payload_t", 0.0)
+        self._oracle_jobs = [tuple(j) for j in state.get("oracle_jobs", [])]
+        self._rebalance_moved = state.get("rebalance_moved", 0)
 
     # ------------------------------------------------------------------
     def _ensure_init(self, srv, netsim: Optional[_NetSim] = None) -> None:
@@ -1326,6 +1536,7 @@ class AsyncEngine(RoundEngine):
             netsim.set_payload(self._payload)
         live = list(srv.executors)
         srv.comm.broadcast(self._payload, live, tag="broadcast")
+        self._payload_t = self._clock.now
         n0 = max(1, math.ceil(self.pipeline_depth * srv.clients_per_round))
         tasks = srv.select_clients(n=n0)
         schedule = srv.scheduler.schedule(srv.round, tasks, live,
@@ -1334,8 +1545,16 @@ class AsyncEngine(RoundEngine):
         self._states = {k: _ExecState(queue=list(schedule.queue(k)))
                         for k in live}
         self._in_system = {t.client for t in tasks}
+        ctrl = self._ctrl(srv)
+        ganged: Set[int] = set()
+        if ctrl is not None and ctrl.gang_waves and netsim is None:
+            chunk = self._chunk_size(srv, self.chunk_size)
+            ganged = self._gang_wave(
+                srv, srv.round, self._states, self._clock, self._payload,
+                chunk, live, lambda k, rep: (k, rep, srv.round))
         for k in live:
-            self._dispatch_next(srv, k, netsim)
+            if k not in ganged:
+                self._dispatch_next(srv, k, netsim)
 
     def _refill(self, srv) -> None:
         """Top the pool back up with a fresh selection, re-scheduled onto
@@ -1361,6 +1580,16 @@ class AsyncEngine(RoundEngine):
         self._in_system.update(t.client for t in fresh)
 
     # ------------------------------------------------------------------
+    def _lambda(self, srv) -> float:
+        """The staleness λ folds discount with: the controller's current
+        value when an :class:`AsyncLambdaController` is attached (DESIGN.md
+        §12), else the engine's static ``staleness_lambda`` — which is also
+        the controller's fallback before its first update."""
+        ctrl = self._ctrl(srv)
+        if ctrl is not None and ctrl.async_lambda is not None:
+            return ctrl.async_lambda.current(self.staleness_lambda)
+        return self.staleness_lambda
+
     def _dispatch_next(self, srv, k: int,
                        netsim: Optional[_NetSim] = None) -> None:
         es = self._states[k]
@@ -1467,10 +1696,17 @@ class AsyncEngine(RoundEngine):
             # comm-priced chunk: busy for download + compute; the upload
             # overlaps the next chunk and folds when its arrival event pops
             # (staleness then counts server updates across the comm delay)
+            ctrl = self._ctrl(srv)
             es.busy_until = netsim.push_chunk(
                 self._clock, rep, start, (k, rep, rnd),
                 self._chunk_record(srv, rnd, rep), version=rnd,
-                fi=fi, counters=self._counters)
+                fi=fi, counters=self._counters,
+                # the live payload was broadcast at _payload_t: with
+                # overlap_comm on, the download overlaps the lane's earlier
+                # compute instead of serializing into this chunk's span
+                overlap_from=(self._payload_t
+                              if ctrl is not None and ctrl.overlap_comm
+                              else None))
             return
 
     # ------------------------------------------------------------------
@@ -1556,7 +1792,7 @@ class AsyncEngine(RoundEngine):
                     else:
                         wire = self._wire(srv, k, rep.partial)
                         s = srv.round - version
-                        gamma = staleness_weight(s, self.staleness_lambda)
+                        gamma = staleness_weight(s, self._lambda(srv))
                         self._buffer = merge_partials(
                             self._buffer, scale_partial(wire, gamma))
                         self._n_folded += rep.n_tasks
@@ -1566,6 +1802,10 @@ class AsyncEngine(RoundEngine):
                         rec = self._chunk_record(srv, version, rep)
                         if rec is not None:
                             self._records.append(rec)
+                            if self._ctrl(srv) is not None:
+                                self._oracle_jobs.append(
+                                    (rec.n_samples, rec.time,
+                                     rec.executor, 0.0))
                         self._in_system.difference_update(
                             rep.completed_clients)
                         if fi is not None:
@@ -1584,7 +1824,7 @@ class AsyncEngine(RoundEngine):
                     self._in_system.difference_update(ce.completed_clients)
                 else:
                     s = srv.round - ce.version
-                    gamma = staleness_weight(s, self.staleness_lambda)
+                    gamma = staleness_weight(s, self._lambda(srv))
                     self._buffer = merge_partials(
                         self._buffer, scale_partial(ce.partial, gamma))
                     self._n_folded += ce.n_tasks
@@ -1593,6 +1833,14 @@ class AsyncEngine(RoundEngine):
                     self._stale_sum += s
                     if ce.record is not None:
                         self._records.append(ce.record)
+                        if self._ctrl(srv) is not None:
+                            self._oracle_jobs.append((
+                                ce.record.n_samples, ce.record.time,
+                                ce.record.executor,
+                                netsim.net.chunk_comm_time(
+                                    list(ce.completed_clients),
+                                    netsim.payload_nbytes, ce.wire_bytes)
+                                if netsim.net is not None else 0.0))
                     self._in_system.difference_update(ce.completed_clients)
                     if fi is not None:
                         fi.clear_retries(ce.completed_clients)
@@ -1642,6 +1890,17 @@ class AsyncEngine(RoundEngine):
                  "stale_folds": float(self._stale_folds),
                  "mean_staleness": self._stale_sum / n_folds,
                  "in_system": float(len(self._in_system))}
+        ctrl = self._ctrl(srv)
+        if ctrl is not None:
+            extra["oracle_makespan"] = oracle_makespan(
+                self._oracle_jobs, list(srv.executors))
+            extra["staleness_lambda"] = self._lambda(srv)
+            if self._rebalance_moved:
+                extra["rebalanced_tasks"] = float(self._rebalance_moved)
+            if ctrl.async_lambda is not None:
+                # one controller step per commit, from the closed window's
+                # mean observed staleness (applies from the next fold on)
+                ctrl.async_lambda.update(self._stale_sum / n_folds)
         if netsim is not None:
             extra.update(netsim.extra())
             # tail dispatches below happen after this window's metrics were
@@ -1675,9 +1934,36 @@ class AsyncEngine(RoundEngine):
             netsim.set_payload(self._payload)
         srv.comm.broadcast(self._payload, list(srv.executors),
                            tag="broadcast")
+        self._payload_t = self._clock.now
         self._refill(srv)
+        if ctrl is not None and ctrl.rebalance and srv.estimator.last_fit:
+            # Pollen-style commit-tail rebalance (DESIGN.md §12): pool every
+            # undispatched task and re-pack LPT under the CURRENT models,
+            # seeding each lane with its busy horizon — in-flight chunks
+            # never move, so nothing double-executes
+            live_r = [k for k in srv.executors if not self._states[k].dead]
+            if len(live_r) >= 2:
+                horizons = {
+                    k: (self._states[k].busy_until
+                        if self._states[k].inflight
+                        else max(self._states[k].t, self._clock.now))
+                    for k in live_r}
+                reb = (srv.placement.rebalance if srv.placement is not None
+                       else rebalance_queues)
+                assignment, moved = reb(
+                    {k: self._states[k].queue for k in live_r}, horizons,
+                    srv.estimator.last_fit, srv._sched_comm_cost())
+                for k in live_r:
+                    self._states[k].queue = assignment[k]
+                self._rebalance_moved += moved
+        ganged: Set[int] = set()
+        if ctrl is not None and ctrl.gang_waves and netsim is None:
+            chunk = self._chunk_size(srv, self.chunk_size)
+            ganged = self._gang_wave(
+                srv, srv.round, self._states, self._clock, self._payload,
+                chunk, list(self._states), lambda k, rep: (k, rep, srv.round))
         for k in list(self._states):
-            if not self._states[k].inflight:
+            if k not in ganged and not self._states[k].inflight:
                 self._dispatch_next(srv, k, netsim)
 
         if srv.checkpoint_manager is not None:

@@ -239,6 +239,14 @@ class ClientAvailability:
             return math.inf
         return t + (self.period - lt) + ws[0][0]
 
+    def fits(self, client: int, t: float, duration: float) -> bool:
+        """True when the client is available at ``t`` AND stays available
+        for the next ``duration`` seconds — the window-fit selection test
+        (DESIGN.md §12): a client whose window closes mid-span would land a
+        dispatch-time skip or a lost upload, so the control plane filters
+        it at selection instead."""
+        return self.available(client, t) and self.remaining(client, t) >= duration
+
     # -- constructors ------------------------------------------------------
     @classmethod
     def always(cls) -> "ClientAvailability":

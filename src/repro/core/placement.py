@@ -159,6 +159,15 @@ class DevicePlacement:
         self._mesh_cache = None
         return dev
 
+    def rebalance(self, queues, horizons, models, comm_cost=None):
+        """Pollen-style throughput-driven re-pinning at queue granularity:
+        re-pack every undispatched task across the executor set from the
+        CURRENT fitted per-device workload models, seeding each lane with
+        its busy horizon (``scheduler.rebalance_queues``).  Returns
+        ``(assignment, moved)``."""
+        from repro.core.scheduler import rebalance_queues
+        return rebalance_queues(queues, horizons, models, comm_cost)
+
     def fail_device(self, device: Any) -> List[int]:
         """A device died: re-pin its executors round-robin onto the live
         devices.  Returns the re-pinned executor ids (the caller must push

@@ -92,6 +92,7 @@ class ParrotServer:
                  availability: Optional[ClientAvailability] = None,
                  faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
+                 control: Optional[Any] = None,
                  fold_fan_in: int = 16,
                  seed: int = 0):
         from repro.core.engine import make_engine
@@ -158,6 +159,12 @@ class ParrotServer:
         self.faults: Optional[FaultInjector] = (
             FaultInjector(faults, retry) if faults is not None
             or retry is not None else None)
+        # adaptive control plane (DESIGN.md §12): self-tuning λ / deadline
+        # controllers, window-fit selection, comm overlap, gang waves and
+        # queue rebalancing, plus oracle-gap tracking.  None (the default)
+        # keeps every engine on its pre-control code path bit-exactly, and
+        # ControlPlane.observer() is pinned behaviour-identical to None.
+        self.control = control
         # crashed executors park here so a scheduled restart (or a
         # checkpoint restore of a pre-crash topology) can revive them
         self._retired: Dict[int, SequentialExecutor] = {}
@@ -211,6 +218,30 @@ class ParrotServer:
         if self.availability is not None:
             av, now = self.availability, self.virtual_now
             filters.append(lambda c: av.available(c, now))
+            ctrl = self.control
+            if ctrl is not None and getattr(ctrl, "window_fit", False):
+                # window-fit selection (DESIGN.md §12): skip clients whose
+                # availability window can't hold their predicted span (+
+                # comm round-trip) — they'd only land a dispatch-time skip
+                # or a lost upload.  Needs at least one fitted model (the
+                # fleet average prices executor-agnostically, since the
+                # client isn't scheduled yet); before the first fit this
+                # filter is inert, preserving the warmup cohort.
+                from repro.core.workload import fleet_average
+                avg = fleet_average(self.estimator.last_fit)
+                if avg is not None:
+                    n_of = self.population.n_samples
+                    net, down = self.network, self._last_payload_nbytes
+                    up = int(down * self._wire_ratio)
+
+                    def _fits(c, av=av, now=now, avg=avg, n_of=n_of,
+                              net=net, down=down, up=up):
+                        dur = avg.predict(n_of(c))
+                        if net is not None:
+                            dur += net.client_comm_time(c, down, up)
+                        return av.fits(c, now, dur)
+
+                    filters.append(_fits)
         if self.faults is not None:
             fi, now = self.faults, self.virtual_now
             filters.append(lambda c: not fi.client_down(c, now))
@@ -320,6 +351,14 @@ class ParrotServer:
         if self.placement is not None:
             ex.set_device(self.placement.pin(k))
         self.executors[k] = ex
+        # canonical live order: plain insertion would park the revived k at
+        # the dict's tail, making round iteration (dispatch and fold order)
+        # depend on the process's crash history — a resumed process rebuilds
+        # the dict in constructor order and would fold in a different order,
+        # breaking bit-exact auto-resume
+        if list(self.executors) != sorted(self.executors):
+            self.executors = {j: self.executors[j]
+                              for j in sorted(self.executors)}
         return True
 
     # ------------------------------------------------------------------

@@ -30,9 +30,10 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.workload import DEFAULT_MODEL, WorkloadEstimator, WorkloadModel
+from repro.core.workload import (DEFAULT_MODEL, WorkloadEstimator,
+                                 WorkloadModel, fleet_average)
 
 #: predicted comm seconds for a chunk's client ids (engines bind a
 #: NetworkModel + the round's payload size into one of these; None = the
@@ -132,12 +133,7 @@ class ParrotScheduler:
         # executors with no history yet (fresh/elastic joiners) default to
         # the fleet average — a pessimistic default would starve them of
         # work forever (found by the hypothesis property suite)
-        if models:
-            avg = WorkloadModel(
-                t_sample=sum(m.t_sample for m in models.values()) / len(models),
-                b=sum(m.b for m in models.values()) / len(models))
-        else:
-            avg = DEFAULT_MODEL
+        avg = fleet_average(models) or DEFAULT_MODEL
         mdl = {k: models.get(k, avg) for k in executors}
         for task in sorted(tasks, key=lambda t: -t.n_samples):   # LPT order
             t_comm = comm_cost(task) if comm_cost is not None else 0.0
@@ -228,3 +224,109 @@ def makespan(assignment: Dict[int, List[ClientTask]],
         m = models.get(k, DEFAULT_MODEL)
         out = max(out, sum(m.predict(t.n_samples) for t in q))
     return out
+
+
+# ---------------------------------------------------------------------------
+# control plane (DESIGN.md §12): hindsight oracle + mid-run queue re-packing
+# ---------------------------------------------------------------------------
+
+#: one realized unit of folded work: (n_samples, time, executor, comm_s).
+#: BSP collects one per task record, the DES engines one per folded chunk.
+OracleJob = Tuple[float, float, int, float]
+
+
+def oracle_makespan(jobs: Sequence[OracleJob],
+                    executors: Sequence[int]) -> float:
+    """Hindsight-optimal LPT makespan of the work that actually folded.
+
+    From the realized jobs, derive each executor's *achieved* per-sample
+    rate t_k = Σtime / Σn_samples (executors that ran nothing take the mean
+    rate — they were available, the oracle may use them), then greedily
+    re-pack the same jobs LPT onto the executor set: job ``j`` goes to
+    ``argmin_k (w_k + n_j·t_k + comm_j)``.  Comm is executor-independent
+    (a client's link doesn't change with placement) and priced serially
+    into the lane, so an engine that overlaps comm with compute can beat
+    this oracle — the gap can legitimately go negative.
+
+    This is the denominator of the benchmarks' ``gap_to_oracle_pct``: what
+    a scheduler with perfect knowledge of the realized spans would have
+    achieved, with no estimation error, no deadline misses, and no idle
+    lanes.  Deterministic: pure arithmetic over the jobs, no rng."""
+    executors = sorted(set(executors))
+    if not jobs or not executors:
+        return 0.0
+    tot_n = {k: 0.0 for k in executors}
+    tot_t = {k: 0.0 for k in executors}
+    for n, t, k, _c in jobs:
+        if k in tot_n:
+            tot_n[k] += float(n)
+            tot_t[k] += float(t)
+    rates = {k: tot_t[k] / tot_n[k] for k in executors if tot_n[k] > 0.0}
+    if not rates:
+        # every job ran on a since-dead executor: fleet rate from all jobs
+        n_all = sum(float(n) for n, *_ in jobs)
+        fleet = (sum(float(t) for _n, t, *_ in jobs) / n_all
+                 if n_all > 0 else 0.0)
+        rates = {}
+    else:
+        fleet = sum(rates.values()) / len(rates)
+    t_k = {k: rates.get(k, fleet) for k in executors}
+    w = {k: 0.0 for k in executors}
+    order = sorted(range(len(jobs)),
+                   key=lambda i: (-float(jobs[i][0]), i))   # LPT, stable
+    for i in order:
+        n, _t, _k0, comm = jobs[i]
+        best_k, best_w = None, float("inf")
+        for k in executors:
+            cand = w[k] + float(n) * t_k[k] + float(comm)
+            if cand < best_w:
+                best_k, best_w = k, cand
+        w[best_k] = best_w
+    return max(w.values(), default=0.0)
+
+
+def rebalance_queues(queues: Dict[int, List[ClientTask]],
+                     horizons: Dict[int, float],
+                     models: Dict[int, WorkloadModel],
+                     comm_cost: Optional[Callable[[ClientTask], float]] = None
+                     ) -> Tuple[Dict[int, List[ClientTask]], int]:
+    """Re-pack every *undispatched* task across the executor set.
+
+    The async engine's queues are built incrementally (one refill schedule
+    per commit, each against the models of its moment), so under drifting
+    device speeds the aggregate backlog goes stale.  This pools all queued
+    tasks and re-runs the Eq. 4 LPT argmin over the CURRENT models, seeding
+    each executor's load with its busy ``horizon`` (completion time of the
+    in-flight chunk) — a busy-slow executor starts deep and sheds work to
+    idle-fast ones.  Pollen-style placement at queue granularity:
+    in-flight work never moves, so nothing double-executes.
+
+    Deterministic: pool order is (executor, queue position), LPT ties break
+    on that order.  Returns the new assignment (same keys as ``queues``)
+    and the number of tasks whose executor changed."""
+    keys = sorted(queues)
+    pool: List[Tuple[int, ClientTask]] = [
+        (k, t) for k in keys for t in queues[k]]
+    if not pool:
+        return {k: [] for k in keys}, 0
+    avg = fleet_average(models) or DEFAULT_MODEL
+    mdl = {k: models.get(k, avg) for k in keys}
+    base = min(horizons.get(k, 0.0) for k in keys)
+    w = {k: max(horizons.get(k, 0.0) - base, 0.0) for k in keys}
+    assignment: Dict[int, List[ClientTask]] = {k: [] for k in keys}
+    moved = 0
+    order = sorted(range(len(pool)),
+                   key=lambda i: (-pool[i][1].n_samples, i))
+    for i in order:
+        home, task = pool[i]
+        t_comm = comm_cost(task) if comm_cost is not None else 0.0
+        best_k, best_w = None, float("inf")
+        for k in keys:
+            cand = w[k] + mdl[k].predict(task.n_samples) + t_comm
+            if cand < best_w:
+                best_k, best_w = k, cand
+        assignment[best_k].append(task)
+        w[best_k] = best_w
+        if best_k != home:
+            moved += 1
+    return assignment, moved

@@ -50,6 +50,20 @@ class WorkloadModel:
 DEFAULT_MODEL = WorkloadModel(t_sample=1.0, b=0.0)
 
 
+def fleet_average(models: Dict[int, "WorkloadModel"]
+                  ) -> Optional["WorkloadModel"]:
+    """Mean (t_sample, b) over the fitted executors — the stand-in for
+    executors with no history yet (fresh/elastic joiners) and for
+    executor-agnostic span predictions (window-fit selection, which must
+    price a client before knowing where it will be scheduled).  None when
+    nothing has been fitted."""
+    if not models:
+        return None
+    return WorkloadModel(
+        t_sample=sum(m.t_sample for m in models.values()) / len(models),
+        b=sum(m.b for m in models.values()) / len(models))
+
+
 def _lstsq(n: np.ndarray, t: np.ndarray) -> WorkloadModel:
     A = np.stack([n, np.ones_like(n)], axis=1)
     (ts, b), *_ = np.linalg.lstsq(A, t, rcond=None)

@@ -23,8 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ClientStateManager, DevicePlacement, ParrotServer,
-                        SequentialExecutor, TickTimer, make_algorithm)
+from repro.core import (ClientData, ClientStateManager, ControlPlane,
+                        DevicePlacement, ParrotServer, SequentialExecutor,
+                        TickTimer, make_algorithm)
 from repro.data import make_classification_clients
 
 
@@ -115,6 +116,59 @@ def main() -> None:
     # colocating path — still bit-exact
     a, b, _, _ = run_pair("bsp", None, K=2 * len(jax.devices()))
     out["parity/oversubscribed/params"] = params_equal(a.params, b.params)
+
+    # -- control plane: DES gang waves on == off, bit-exact ---------------
+    # equal-sized clients so every head chunk plans into one aligned block
+    # wave (run_queues_ganged's homogeneity gate); under the shared
+    # TickTimer every measured span equals dt regardless of interleaving,
+    # so ganged reports — and therefore params AND makespans — must be
+    # bit-identical to the serial dispatch
+    rng = np.random.default_rng(0)
+    udata = {}
+    for c in range(24):
+        ys = rng.integers(0, 10, size=40).astype(np.int32)
+        xs = rng.normal(size=(40, 16)).astype(np.float32)
+        udata[c] = ClientData(
+            batches=[{"x": xs[i:i + 20], "y": ys[i:i + 20]}
+                     for i in range(0, 40, 20)], n_samples=40)
+
+    def gang_build(engine, opts, control):
+        algo = make_algorithm("fedavg", GRAD_FN, 0.05, local_epochs=1)
+        sm = ClientStateManager(tempfile.mkdtemp(prefix="gang_"))
+        timer = TickTimer()
+        execs = [SequentialExecutor(k, algo, state_manager=sm, timer=timer,
+                                    device=jax.devices()[k])
+                 for k in range(4)]
+        return ParrotServer(params=mlp_params(), algorithm=algo,
+                            executors=execs, data_by_client=udata,
+                            clients_per_round=8, round_engine=engine,
+                            engine_opts=opts, control=control, seed=0)
+
+    def count_calls(srv, box):
+        for ex in srv.executors.values():
+            real = ex.run_queue
+
+            def counting(*a, _real=real, **kw):
+                box[0] += 1
+                return _real(*a, **kw)
+
+            ex.run_queue = counting
+
+    for engine in ("semi-sync", "async"):
+        a = gang_build(engine, {"chunk_size": 2}, ControlPlane.observer())
+        b = gang_build(engine, {"chunk_size": 2},
+                       ControlPlane(gang_waves=True))
+        ca, cb = [0], [0]
+        count_calls(a, ca)
+        count_calls(b, cb)
+        ha = [a.run_round() for _ in range(4)]
+        hb = [b.run_round() for _ in range(4)]
+        out[f"control/gang/{engine}/params"] = params_equal(a.params,
+                                                            b.params)
+        out[f"control/gang/{engine}/makespans"] = \
+            [m.makespan for m in ha] == [m.makespan for m in hb]
+        # the gang actually fired: ganged head chunks bypass run_queue
+        out[f"control/gang/{engine}/fired"] = cb[0] < ca[0]
 
     # -- executor failure: dead pin released, survivors re-home ----------
     a, b, _, hb = run_pair("bsp", None, fail_at=(1, 0), fail_on=2, rounds=3)

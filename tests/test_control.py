@@ -1,0 +1,502 @@
+"""Adaptive control plane (DESIGN.md §12).
+
+Anchors:
+  * ``control=None`` and ``ControlPlane.observer()`` are bit-identical
+    (params AND makespan history) for all three engines — the observer only
+    adds oracle tracking;
+  * controller determinism — same seed + same chaos plan ⇒ identical
+    λ / deadline trajectories and params digests across two runs, and
+    across a mid-round kill + ``auto_resume=True``;
+  * comm/compute overlap changes pricing only: params stay bit-identical,
+    simulated makespans never increase;
+  * window-fit selection prices a client's span + comm against its
+    remaining availability window.
+
+Plus unit coverage of the λ / deadline controllers, the hindsight-optimal
+``oracle_makespan`` LPT bound, and ``rebalance_queues``.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, params_digest
+from repro.core import (AsyncLambdaController, ClientAvailability,
+                        ClientStateManager, ControlPlane, DeadlineController,
+                        FaultPlan, LinkProfile, NetworkModel, ParrotServer,
+                        RetryPolicy, SequentialExecutor, TickTimer,
+                        make_algorithm, oracle_makespan, rebalance_queues)
+from repro.core.scheduler import ClientTask
+from repro.core.workload import WorkloadModel
+from repro.data import make_classification_clients
+
+
+def _loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+GRAD_FN = jax.jit(jax.value_and_grad(_loss_fn))
+PARAMS0 = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+
+ENGINES = [("bsp", None),
+           ("semi-sync", {"chunk_size": 2, "deadline_frac": 0.7}),
+           ("async", {"chunk_size": 2})]
+
+
+def _data(n=40, seed=1):
+    return make_classification_clients(n, dim=8, n_classes=4,
+                                       mean_samples=30, batch_size=10,
+                                       seed=seed)
+
+
+def _make_server(data, K=4, clients_per_round=10, **kw):
+    algo = make_algorithm("fedavg", GRAD_FN, lr=0.1)
+    sm = ClientStateManager(tempfile.mkdtemp())
+    execs = [SequentialExecutor(k, algo, state_manager=sm,
+                                speed_model=lambda kk, r: 0.0,
+                                timer=TickTimer(1.0))
+             for k in range(K)]
+    return ParrotServer(params=PARAMS0, algorithm=algo, executors=execs,
+                        data_by_client=data,
+                        clients_per_round=clients_per_round, seed=7, **kw)
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# controller units
+# ---------------------------------------------------------------------------
+
+def test_lambda_controller_targets_gamma():
+    c = AsyncLambdaController(target_gamma=0.6)
+    assert c.current(1.23) == 1.23              # fallback until first update
+    lam = c.update(2.0)                          # first EWMA == observation
+    # γ = 1/(1+λ·s̄) == 0.6  ⇔  λ = (1/0.6 − 1)/2
+    assert lam == pytest.approx((1.0 / 0.6 - 1.0) / 2.0)
+    assert c.current(1.23) == lam
+    assert 1.0 / (1.0 + lam * 2.0) == pytest.approx(0.6)
+
+
+def test_lambda_controller_clips():
+    c = AsyncLambdaController(target_gamma=0.6, lam_min=0.05, lam_max=4.0)
+    assert c.update(1e9) == 0.05                 # huge staleness → floor
+    c2 = AsyncLambdaController(target_gamma=0.6, lam_min=0.05, lam_max=4.0)
+    assert c2.update(0.0) == 4.0                 # zero staleness → ceiling
+
+
+def test_lambda_controller_rejects_bad_gamma():
+    with pytest.raises(ValueError):
+        AsyncLambdaController(target_gamma=1.0)
+    with pytest.raises(ValueError):
+        AsyncLambdaController(target_gamma=0.0)
+
+
+def test_deadline_controller_tightens_and_loosens():
+    c = DeadlineController(target_ratio=0.5, gain=0.6, alpha=1.0)
+    # everyone landed (ratio 1.0 > target) → deadline tightens below start
+    tight = c.update(10, 10, fallback_frac=0.8, default_target=0.5)
+    assert tight < 0.8
+    # nobody landed (ratio 0.0 < target) → loosens back up
+    loose = c.update(0, 10, fallback_frac=0.8, default_target=0.5)
+    assert loose > tight
+    # frac stays inside the clip box whatever the history
+    for _ in range(50):
+        v = c.update(10, 10, fallback_frac=0.8, default_target=0.5)
+    assert v == pytest.approx(c.frac_min)
+    # selected == 0 is a no-op observation
+    assert c.update(0, 0, fallback_frac=0.8, default_target=0.5) == v
+
+
+def test_deadline_controller_default_target():
+    # target_ratio=None defers to the engine-supplied default (1/over_select)
+    c = DeadlineController(target_ratio=None, alpha=1.0)
+    v = c.update(5, 10, fallback_frac=0.8, default_target=0.5)
+    assert v == pytest.approx(0.8)               # on-target ⇒ unchanged
+
+
+def test_controller_state_round_trips():
+    a = AsyncLambdaController()
+    a.update(3.0)
+    b = AsyncLambdaController()
+    b.load_state_dict(a.state_dict())
+    assert b.current(0.0) == a.current(0.0) and b._ewma == a._ewma
+
+    d = DeadlineController(target_ratio=0.5)
+    d.update(7, 10, 0.8, 0.5)
+    e = DeadlineController(target_ratio=0.5)
+    e.load_state_dict(d.state_dict())
+    assert e.current(0.0) == d.current(0.0) and e._ewma == d._ewma
+
+
+def test_control_plane_state_round_trips():
+    cp = ControlPlane.adaptive()
+    cp.async_lambda.update(2.0)
+    cp.deadline.update(6, 10, 0.8, 0.5)
+    fresh = ControlPlane.adaptive()
+    fresh.load_state_dict(cp.state_dict())
+    assert fresh.async_lambda.current(0.0) == cp.async_lambda.current(0.0)
+    assert fresh.deadline.current(0.0) == cp.deadline.current(0.0)
+    # observer state is all-None and load is a no-op on both sides
+    obs = ControlPlane.observer()
+    assert obs.state_dict() == {"async_lambda": None, "deadline": None}
+    obs.load_state_dict(cp.state_dict())
+    fresh.load_state_dict(None)
+
+
+# ---------------------------------------------------------------------------
+# oracle makespan (hindsight-optimal LPT bound)
+# ---------------------------------------------------------------------------
+
+def test_oracle_empty_and_single():
+    assert oracle_makespan([], [0, 1]) == 0.0
+    assert oracle_makespan([(10.0, 5.0, 0, 0.0)], []) == 0.0
+    # one job: realized rate t/n, so the oracle replays it exactly (+comm)
+    assert oracle_makespan([(10.0, 5.0, 0, 0.0)], [0]) == pytest.approx(5.0)
+    assert oracle_makespan([(10.0, 5.0, 0, 2.5)], [0]) == pytest.approx(7.5)
+
+
+def test_oracle_balances_over_realized_rates():
+    # ex0 realized 1 s/sample, ex1 realized 2 s/sample; two 10-sample jobs
+    jobs = [(10.0, 10.0, 0, 0.0), (10.0, 20.0, 1, 0.0)]
+    assert oracle_makespan(jobs, [0, 1]) == pytest.approx(20.0)
+    # four jobs that all ran serially on ex0 (realized makespan 40):
+    # hindsight spreads them over both lanes
+    jobs = [(10.0, 10.0, 0, 0.0)] * 4
+    assert oracle_makespan(jobs, [0, 1]) < 40.0
+
+
+def test_oracle_fleet_fallback_for_unfitted_executor():
+    # executor 1 never ran anything: it prices at the fleet-mean rate and
+    # the oracle still parallelises across it
+    jobs = [(10.0, 10.0, 0, 0.0), (10.0, 10.0, 0, 0.0)]
+    assert oracle_makespan(jobs, [0, 1]) == pytest.approx(10.0)
+
+
+def test_oracle_never_exceeds_serial_pile_up():
+    rng = np.random.default_rng(0)
+    jobs = [(float(rng.integers(5, 50)), float(rng.uniform(1, 10)),
+             int(rng.integers(0, 3)), float(rng.uniform(0, 1)))
+            for _ in range(30)]
+    serial = {}
+    for n, t, k, c in jobs:
+        serial[k] = serial.get(k, 0.0) + t + c
+    assert oracle_makespan(jobs, [0, 1, 2]) <= max(serial.values()) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# queue rebalancing
+# ---------------------------------------------------------------------------
+
+def test_rebalance_empty_pool():
+    assignment, moved = rebalance_queues({0: [], 1: []}, {0: 0.0, 1: 0.0},
+                                         {})
+    assert assignment == {0: [], 1: []} and moved == 0
+
+
+def test_rebalance_spreads_one_sided_load():
+    tasks = [ClientTask(c, 10) for c in range(6)]
+    models = {0: WorkloadModel(1.0, 0.0), 1: WorkloadModel(1.0, 0.0)}
+    assignment, moved = rebalance_queues({0: list(tasks), 1: []},
+                                         {0: 0.0, 1: 0.0}, models)
+    assert len(assignment[0]) == 3 and len(assignment[1]) == 3
+    assert moved == 3
+    # nothing lost or duplicated
+    got = sorted(t.client for q in assignment.values() for t in q)
+    assert got == list(range(6))
+
+
+def test_rebalance_respects_horizons_and_rates():
+    tasks = [ClientTask(c, 10) for c in range(4)]
+    models = {0: WorkloadModel(1.0, 0.0), 1: WorkloadModel(1.0, 0.0)}
+    # lane 1 is busy until far in the future: everything stays on lane 0
+    assignment, moved = rebalance_queues({0: list(tasks), 1: []},
+                                         {0: 0.0, 1: 1e6}, models)
+    assert len(assignment[0]) == 4 and moved == 0
+    # lane 1 is 10x faster: it takes the lion's share
+    fast = {0: WorkloadModel(1.0, 0.0), 1: WorkloadModel(0.1, 0.0)}
+    assignment, _ = rebalance_queues({0: list(tasks), 1: []},
+                                     {0: 0.0, 1: 0.0}, fast)
+    assert len(assignment[1]) > len(assignment[0])
+
+
+def test_rebalance_deterministic_and_comm_aware():
+    tasks = [ClientTask(c, 10 + c) for c in range(5)]
+    queues = {0: tasks[:3], 1: tasks[3:]}
+    horizons = {0: 2.0, 1: 0.0}
+    models = {0: WorkloadModel(0.5, 0.1), 1: WorkloadModel(0.7, 0.0)}
+    a = rebalance_queues(queues, horizons, models)
+    b = rebalance_queues(queues, horizons, models)
+    assert a == b
+    # a prohibitive migration cost pins every task to the cheapest lane the
+    # LPT pass would pick anyway — the call stays total (no task dropped)
+    c, _ = rebalance_queues(queues, horizons, models,
+                            comm_cost=lambda t: 100.0)
+    assert sorted(t.client for q in c.values() for t in q) == \
+        sorted(t.client for q in queues.values() for t in q)
+
+
+# ---------------------------------------------------------------------------
+# availability window-fit
+# ---------------------------------------------------------------------------
+
+def test_availability_fits():
+    av = ClientAvailability({0: [(0.0, 5.0)]}, period=None)
+    assert av.fits(0, 1.0, 3.0)          # 4 s remaining ≥ 3 s span
+    assert not av.fits(0, 3.0, 3.0)      # 2 s remaining < 3 s span
+    assert not av.fits(0, 6.0, 0.5)      # window already closed
+
+
+def test_window_fit_selection_filters_short_windows():
+    data = _data(n=20)
+    # clients 0..9 have 1 s of window left at t=4; 10..19 are always on
+    av = ClientAvailability(
+        {c: ([(0.0, 5.0)] if c < 10 else [(0.0, 1e9)]) for c in range(20)},
+        period=None)
+
+    def pick(control):
+        srv = _make_server(data, clients_per_round=12, availability=av,
+                           control=control)
+        # one fitted model ⇒ fleet-average predicts ~30 s per client, far
+        # beyond the 1 s the short-window clients have left
+        srv.estimator.last_fit = {0: WorkloadModel(t_sample=1.0, b=0.0)}
+        srv.virtual_now = 4.0
+        return {t.client for t in srv.select_clients()}
+
+    fitted = pick(ControlPlane(window_fit=True))
+    assert fitted and all(c >= 10 for c in fitted)
+    # observer (lever off) still samples the short-window clients
+    assert any(c < 10 for c in pick(ControlPlane.observer()))
+
+
+def test_window_fit_inert_before_first_fit():
+    data = _data(n=20)
+    av = ClientAvailability({c: [(0.0, 5.0)] for c in range(20)},
+                            period=None)
+    a = _make_server(data, availability=av,
+                     control=ControlPlane(window_fit=True))
+    b = _make_server(data, availability=av, control=None)
+    assert [t.client for t in a.select_clients()] == \
+        [t.client for t in b.select_clients()]
+
+
+# ---------------------------------------------------------------------------
+# observer ≡ control=None (bit-exact), oracle tracking extras
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,opts", ENGINES)
+def test_observer_is_bit_identical_to_none(engine, opts):
+    a = _make_server(_data(), round_engine=engine, engine_opts=opts,
+                     control=None)
+    b = _make_server(_data(), round_engine=engine, engine_opts=opts,
+                     control=ControlPlane.observer())
+    ha = [a.run_round() for _ in range(4)]
+    hb = [b.run_round() for _ in range(4)]
+    _params_equal(a.params, b.params)
+    assert [m.makespan for m in ha] == [m.makespan for m in hb]
+    # the observer's only side effect: hindsight-oracle tracking.  (The
+    # oracle prices jobs under the linear n·rate model, so against a
+    # constant-per-chunk TickTimer it is a reference point, not a strict
+    # lower bound — the benchmarks' gap can legitimately go negative.)
+    assert all("oracle_makespan" not in m.extra for m in ha)
+    assert all(m.extra["oracle_makespan"] > 0.0 for m in hb)
+
+
+def test_semi_sync_observer_reports_static_frac():
+    srv = _make_server(_data(), round_engine="semi-sync",
+                       engine_opts={"chunk_size": 2, "deadline_frac": 0.7},
+                       control=ControlPlane.observer())
+    m = srv.run_round()
+    assert m.extra["deadline_frac"] == pytest.approx(0.7)
+
+
+def test_async_observer_reports_static_lambda():
+    srv = _make_server(_data(), round_engine="async",
+                       engine_opts={"chunk_size": 2,
+                                    "staleness_lambda": 0.5},
+                       control=ControlPlane.observer())
+    m = srv.run_round()
+    assert m.extra["staleness_lambda"] == pytest.approx(0.5)
+
+
+def test_semi_sync_deadline_controller_moves_frac():
+    ctrl = ControlPlane(deadline=DeadlineController(target_ratio=0.5,
+                                                    alpha=1.0))
+    srv = _make_server(_data(), round_engine="semi-sync",
+                       engine_opts={"chunk_size": 2, "deadline_frac": 0.9},
+                       control=ctrl)
+    fracs = [srv.run_round().extra["deadline_frac"] for _ in range(4)]
+    assert fracs[0] == pytest.approx(0.9)        # first round: fallback
+    # warmup rounds (deadline ∞, nothing enforced) carry no signal — the
+    # controller must NOT learn from them; it takes over once the first
+    # enforced round lands
+    assert fracs[1] == pytest.approx(0.9)
+    assert fracs[2] != fracs[0]                  # controller took over
+    assert all(ctrl.deadline.frac_min <= f <= ctrl.deadline.frac_max
+               for f in fracs[2:])
+
+
+def test_async_lambda_controller_moves_lambda():
+    ctrl = ControlPlane(async_lambda=AsyncLambdaController(target_gamma=0.6))
+    srv = _make_server(_data(), round_engine="async",
+                       engine_opts={"chunk_size": 2,
+                                    "staleness_lambda": 0.5},
+                       control=ctrl)
+    lams = [srv.run_round().extra["staleness_lambda"] for _ in range(4)]
+    assert lams[0] == pytest.approx(0.5)         # first commit: fallback
+    assert lams[1] != lams[0]
+    assert all(ctrl.async_lambda.lam_min <= l <= ctrl.async_lambda.lam_max
+               for l in lams[1:])
+
+
+# ---------------------------------------------------------------------------
+# comm/compute overlap: pricing-only, never slower
+# ---------------------------------------------------------------------------
+
+_NET = {c: LinkProfile(100.0, 50.0, 0.2) for c in range(40)}
+
+
+@pytest.mark.parametrize("engine,opts", ENGINES)
+def test_overlap_prices_only_never_slower(engine, opts):
+    a = _make_server(_data(), round_engine=engine, engine_opts=opts,
+                     network=NetworkModel(_NET),
+                     control=ControlPlane.observer())
+    b = _make_server(_data(), round_engine=engine, engine_opts=opts,
+                     network=NetworkModel(_NET),
+                     control=ControlPlane(overlap_comm=True))
+    ha = [a.run_round() for _ in range(4)]
+    hb = [b.run_round() for _ in range(4)]
+    # overlap re-prices comm but folds the same updates in the same order
+    _params_equal(a.params, b.params)
+    assert sum(m.makespan for m in hb) <= sum(m.makespan for m in ha) + 1e-9
+
+
+def test_bsp_overlap_span_hides_slow_downlink_behind_compute():
+    """A slow-link client LATE in the queue downloads while the earlier
+    clients compute: the serial branch pays the queue-bottleneck download
+    up front, the overlapped span hides it.  Equal links ⇒ the two prices
+    coincide (the first client's download can overlap nothing)."""
+    from repro.core.engine import _NetSim
+    from repro.core.executor import ExecutorReport
+    from repro.core.workload import RunRecord
+
+    net = NetworkModel({0: LinkProfile(1e6, 1e6, 0.0),      # instant
+                        1: LinkProfile(1e6, 100.0, 0.0)})   # 1.5 s download
+
+    class _Srv:
+        network = net
+        availability = None
+        _last_payload_nbytes = 150
+        _wire_ratio = 1.0
+    sim = _NetSim(_Srv(), t0=0.0)
+    sim.payload_nbytes = 150
+
+    rep = ExecutorReport(
+        executor=0, partial={},
+        records=[RunRecord(0, 0, 0, 30, 2.0), RunRecord(0, 1, 0, 30, 2.0)],
+        virtual_time=4.0, wall_time=0.0, n_tasks=2,
+        completed_clients=[0, 1])
+    from repro.core.engine import BSPEngine
+    overlap = BSPEngine._overlap_span(sim, [rep])
+    sim2 = _NetSim(_Srv(), t0=0.0)
+    sim2.payload_nbytes = 150
+    serial = (sim2.down(rep.completed_clients) + rep.virtual_time
+              + sim2.up(rep.completed_clients, rep.wire_bytes))
+    # client 1's 1.5 s download hides behind client 0's 2 s of compute
+    assert overlap < serial
+    # span = client 0's own tiny download + both compute slices
+    assert overlap == pytest.approx(150.0 / 1e6 + 4.0)
+    # accounting parity: both branches charge the same downlink seconds
+    assert sim.time_down == pytest.approx(sim2.time_down)
+
+
+# ---------------------------------------------------------------------------
+# controller determinism under chaos + crash/resume (DESIGN.md §10 × §12)
+# ---------------------------------------------------------------------------
+
+FAULT_PARAMS = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+_KILL_AFTER = {"bsp": 4, "semi-sync": 10, "async": 9}
+
+
+def _fault_build(engine, ckpt_dir, control):
+    data = _data(n=30)
+    algo = make_algorithm("fedavg", grad_fn=GRAD_FN, lr=0.1, local_steps=2)
+    sm = ClientStateManager(tempfile.mkdtemp(prefix="ctrlckpt_"))
+    execs = [SequentialExecutor(k, algo, state_manager=sm,
+                                speed_model=lambda kk, r: 0.0,
+                                timer=TickTimer(1.0)) for k in range(3)]
+    plan = FaultPlan.random(seed=3, horizon=80.0, executors=[0, 1, 2],
+                            clients=list(range(30)),
+                            crash_rate=0.05, restart_delay=5.0,
+                            dropout_rate=0.1, dropout_duration=4.0,
+                            corrupt_rate=0.05,
+                            slowdown_rate=0.03, slowdown_duration=6.0)
+    opts = {"chunk_size": 2} if engine != "bsp" else None
+    return ParrotServer(params=FAULT_PARAMS, algorithm=algo,
+                        executors=execs, data_by_client=data,
+                        clients_per_round=8, seed=7, round_engine=engine,
+                        engine_opts=opts, faults=plan,
+                        retry=RetryPolicy(max_retries=2), control=control,
+                        checkpoint_manager=CheckpointManager(
+                            ckpt_dir, every_rounds=1, keep=10))
+
+
+def _trajectory(history):
+    return [(m.extra.get("staleness_lambda"), m.extra.get("deadline_frac"))
+            for m in history]
+
+
+@pytest.mark.parametrize("engine", ["bsp", "semi-sync", "async"])
+def test_adaptive_run_is_deterministic_under_chaos(engine, tmp_path):
+    def mk(d):
+        return _fault_build(engine, str(tmp_path / d),
+                            ControlPlane.adaptive())
+    a, b = mk("a"), mk("b")
+    a.run(6)
+    b.run(6)
+    assert params_digest(a.params) == params_digest(b.params)
+    assert _trajectory(a.history) == _trajectory(b.history)
+    assert [m.makespan for m in a.history] == \
+        [m.makespan for m in b.history]
+
+
+@pytest.mark.parametrize("engine", ["bsp", "semi-sync", "async"])
+def test_adaptive_kill_then_auto_resume_is_bit_exact(engine, tmp_path):
+    N = 8
+    ref = _fault_build(engine, str(tmp_path / "ref"),
+                       ControlPlane.adaptive())
+    ref.run(N)
+    want = params_digest(ref.params)
+
+    d = str(tmp_path / "ck")
+    victim = _fault_build(engine, d, ControlPlane.adaptive())
+    ex0 = victim.executors[0]
+    real, calls = ex0.run_queue, [0]
+
+    def dying(*a, **kw):
+        calls[0] += 1
+        if calls[0] >= _KILL_AFTER[engine]:
+            raise KeyboardInterrupt
+        return real(*a, **kw)
+
+    ex0.run_queue = dying
+    with pytest.raises(KeyboardInterrupt):
+        victim.run(N)
+    assert 1 <= victim.round < N
+
+    # a fresh server (fresh controllers) must reload the λ/deadline state
+    # from the blob and replay the exact trajectory
+    resumed = _fault_build(engine, d, ControlPlane.adaptive())
+    resumed.run(N, auto_resume=True)
+    assert resumed.round == N
+    assert params_digest(resumed.params) == want
+    assert _trajectory(resumed.history) == _trajectory(ref.history)
