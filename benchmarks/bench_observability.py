@@ -1,0 +1,102 @@
+"""Telemetry observability benchmark (DESIGN.md §13).
+
+Two questions:
+
+* **Overhead** — what does ``telemetry=True`` cost in host wall time?
+  Interleaved best-of-reps A/B on identical TickTimer runs (same work, same
+  jit cache) across all three engines; ``overhead_pct`` is the relative
+  wall delta of the summed minima.  The CI smoke step bounds it at 5%.
+* **Utilization** — the per-executor busy/comm/idle fractions (the paper's
+  "computing utility") each engine achieves under ``dynamic_env``
+  heterogeneity with a constrained uniform uplink.  BSP's barrier idles the
+  fast lanes; semi-sync's deadline and async's pipeline reclaim them.
+
+Plus a ``trace_valid`` row: the async cell's exported Chrome trace passes
+``validate_trace`` (1.0 = no violations).
+
+``BENCH_OBS_ROUNDS`` / ``BENCH_OBS_REPS`` override the round / repetition
+counts (CI smoke runs few).
+"""
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import NetworkModel, TickTimer, validate_trace
+from repro.core.executor import dynamic_env
+
+ROUNDS = int(os.environ.get("BENCH_OBS_ROUNDS", "8"))
+REPS = int(os.environ.get("BENCH_OBS_REPS", "3"))
+SKIP = max(1, ROUNDS // 4)
+K = 4
+NET = NetworkModel.uniform(uplink_bps=2e5, downlink_bps=1e6, latency_s=0.05)
+
+ENGINES = [
+    ("bsp", "bsp", {}),
+    ("semi_sync", "semi-sync", {"deadline_frac": 0.7, "over_select": 1.2,
+                                "chunk_size": 4}),
+    ("async", "async", {"staleness_lambda": 0.5, "chunk_size": 4}),
+]
+
+
+def _build(engine, opts, telemetry):
+    return common.build_server(
+        n_clients=80, clients_per_round=24, K=K,
+        speed_model=dynamic_env(K, ROUNDS), warmup_rounds=1,
+        round_engine=engine, engine_opts=opts, network=NET,
+        timer=TickTimer(1.0), telemetry=telemetry)
+
+
+def _wall(engine, opts, telemetry):
+    srv = _build(engine, opts, telemetry)
+    t0 = time.perf_counter()
+    for _ in range(ROUNDS):
+        srv.run_round()
+    return time.perf_counter() - t0, srv
+
+
+def run() -> None:
+    # -- overhead: interleaved best-of-reps, telemetry off vs on ----------
+    walls = {False: {}, True: {}}      # enabled -> engine -> [wall, ...]
+    for rep in range(REPS):
+        for name, engine, opts in ENGINES:
+            for enabled in (False, True):
+                w, _ = _wall(engine, opts, True if enabled else None)
+                walls[enabled].setdefault(name, []).append(w)
+    off = sum(min(ws) for ws in walls[False].values())
+    on = sum(min(ws) for ws in walls[True].values())
+    overhead = 100.0 * (on - off) / max(off, 1e-12)
+    common.emit("observability/overhead_pct", overhead,
+                f"wall_off_s={off:.3f} wall_on_s={on:.3f} reps={REPS} "
+                f"rounds={ROUNDS}")
+
+    # -- per-engine utilization under dynamic heterogeneity ---------------
+    last_srv = None
+    for name, engine, opts in ENGINES:
+        srv = _build(engine, opts, True)
+        metrics = [srv.run_round() for _ in range(ROUNDS)]
+        fracs = {"busy_frac": [], "comm_frac": [], "idle_frac": []}
+        for m in metrics[SKIP:]:
+            for u in m.extra["utilization"].values():
+                for key in fracs:
+                    fracs[key].append(u[key])
+        means = {key: float(np.mean(v)) for key, v in fracs.items()}
+        for key in ("busy_frac", "comm_frac", "idle_frac"):
+            common.emit(f"observability/{name}/{key}", means[key],
+                        " ".join(f"{k2}={v2:.3f}"
+                                 for k2, v2 in means.items()))
+        if engine == "async":
+            last_srv = srv
+
+    # -- exported trace validates -----------------------------------------
+    path = os.path.join(tempfile.mkdtemp(prefix="bench_obs_"), "trace.json")
+    last_srv.telemetry.tracer.export(path)
+    errors = validate_trace(path)
+    with open(path) as f:
+        n_events = len(json.load(f)["traceEvents"])
+    common.emit("observability/trace_valid",
+                1.0 if not errors else 0.0,
+                f"events={n_events} errors={len(errors)}")

@@ -71,7 +71,7 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                  warmup_rounds=1, round_engine="bsp",
                  engine_opts=None, network=None,
                  availability=None, faults=None, retry=None,
-                 timer=None, control=None) -> ParrotServer:
+                 timer=None, control=None, telemetry=None) -> ParrotServer:
     data = make_classification_clients(
         n_clients, dim=32, n_classes=10, partition=partition,
         partition_arg=partition_arg, mean_samples=60, batch_size=20,
@@ -89,7 +89,7 @@ def build_server(*, n_clients=200, clients_per_round=40, K=8,
                         round_engine=round_engine, engine_opts=engine_opts,
                         network=network, availability=availability,
                         faults=faults, retry=retry, control=control,
-                        seed=seed)
+                        telemetry=telemetry, seed=seed)
 
 
 def eval_loss(server: ParrotServer) -> float:

@@ -34,6 +34,9 @@ Mapping to the paper:
   bench_population_scaling — streamed-population memory axis: peak RSS and
                       selection latency at 1k..1M clients, fixed cohort
                       (alias: population)
+  bench_observability — telemetry on/off wall overhead + per-engine
+                      busy/comm/idle utilization + trace validation
+                      (alias: obs)
   bench_kernels     — Pallas wrapper micro-timings (plumbing check)
   roofline          — §Roofline terms from the dry-run artifacts
 """
@@ -52,11 +55,12 @@ MODS = ["bench_scheduling", "bench_estimation", "bench_scaling",
         "bench_aggregation", "bench_client_training", "bench_round_modes",
         "bench_network", "bench_compression", "bench_device_scaling",
         "bench_fault_tolerance", "bench_population_scaling",
-        "bench_kernels", "roofline"]
+        "bench_observability", "bench_kernels", "roofline"]
 
 # convenience aliases on top of the bench_ prefix rule
 ALIASES = {"faults": "bench_fault_tolerance",
-           "population": "bench_population_scaling"}
+           "population": "bench_population_scaling",
+           "obs": "bench_observability"}
 
 
 def main(argv=None) -> None:

@@ -119,6 +119,12 @@ class CheckpointManager:
                                is not None
                                and hasattr(server.compressor, "state_dict")
                                else None),
+                # telemetry state (DESIGN.md §13): tracer spans + metrics
+                # registry ride along so auto_resume reproduces the
+                # uninterrupted run's trace exactly
+                "telemetry": (server.telemetry.state_dict()
+                              if getattr(server, "telemetry", None)
+                              is not None else None),
                 "time": time.time(),
             }
             digest = params_digest(blob["params"])
@@ -197,6 +203,10 @@ class CheckpointManager:
         if getattr(server, "compressor", None) is not None \
                 and hasattr(server.compressor, "load_state_dict"):
             server.compressor.load_state_dict(blob.get("compressor"))
+        if getattr(server, "telemetry", None) is not None:
+            # wholesale replace (construction-time plan spans included), so
+            # a resumed trace equals the uninterrupted run's
+            server.telemetry.load_state_dict(blob.get("telemetry"))
         # reconcile the executor topology with the checkpointed one: a
         # fresh server is constructed with the FULL executor set, but the
         # saved run may have had some crashed — retire those (releasing

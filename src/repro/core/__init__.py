@@ -20,6 +20,9 @@
   control.py                 — adaptive control plane (self-tuning λ /
                                deadline controllers, comm overlap, gang
                                waves, oracle-gap tracking, §12)
+  telemetry.py               — virtual-time telemetry (span tracer with
+                               Chrome-trace/Perfetto export, typed metrics
+                               registry, utilization accounting, §13)
 """
 from repro.core.aggregation import (ClientResult, LocalAggregator, Op,
                                     flat_aggregate, global_aggregate)
@@ -42,6 +45,8 @@ from repro.core.round import ParrotServer, RoundMetrics, run_flat_reference
 from repro.core.scheduler import (ClientTask, ParrotScheduler, Schedule,
                                   oracle_makespan, rebalance_queues)
 from repro.core.state_manager import ClientStateManager, owner_host
+from repro.core.telemetry import (MetricsRegistry, Telemetry, Tracer,
+                                  validate_trace)
 from repro.core.workload import (RunRecord, WorkloadEstimator,
                                  WorkloadModel, fleet_average)
 
@@ -52,14 +57,16 @@ __all__ = [
     "ClientStateManager", "ClientStepEngine", "ClientTask", "CommEvent",
     "ControlPlane", "DeadlineController", "DevicePlacement",
     "FLAlgorithm", "FaultEvent", "FaultInjector", "FaultPlan",
-    "FlatLayout", "LinkProfile", "LocalAggregator", "NetworkModel", "Op",
+    "FlatLayout", "LinkProfile", "LocalAggregator", "MetricsRegistry",
+    "NetworkModel", "Op",
     "ParrotScheduler",
     "ParrotServer", "RetryPolicy",
     "RoundEngine", "RoundMetrics", "RunRecord", "Schedule",
-    "SemiSyncEngine", "SequentialExecutor", "TickTimer", "VirtualClock",
+    "SemiSyncEngine", "SequentialExecutor", "Telemetry", "TickTimer",
+    "Tracer", "VirtualClock",
     "WorkloadEstimator", "WorkloadModel",
     "engine_for", "flat_aggregate", "fleet_average", "global_aggregate",
     "make_algorithm",
     "make_engine", "oracle_makespan", "owner_host", "rebalance_queues",
-    "run_flat_reference",
+    "run_flat_reference", "validate_trace",
 ]

@@ -162,6 +162,17 @@ class ControlPlane:
         self.overlap_comm = bool(overlap_comm)
         self.gang_waves = bool(gang_waves)
         self.rebalance = bool(rebalance)
+        # wired by ParrotServer when telemetry is attached (DESIGN.md §13):
+        # controller moves land on the "control" lane via note(); pure
+        # recording, never consulted for behaviour and not checkpointed
+        # here (the Telemetry bundle owns its own state)
+        self.telemetry: Optional[Any] = None
+
+    def note(self, name: str, value: float, t: float) -> None:
+        """Record one controller move (an instant on the ``control`` lane
+        plus a ``control/<name>`` gauge).  No-op without telemetry."""
+        if self.telemetry is not None:
+            self.telemetry.control_event(name, value, t)
 
     @classmethod
     def observer(cls) -> "ControlPlane":

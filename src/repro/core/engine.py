@@ -107,7 +107,8 @@ def _host_report(rep: ExecutorReport) -> ExecutorReport:
         executor=rep.executor, partial=_host_tree(rep.partial),
         records=list(rep.records), virtual_time=rep.virtual_time,
         wall_time=rep.wall_time, n_tasks=rep.n_tasks,
-        completed_clients=list(rep.completed_clients))
+        completed_clients=list(rep.completed_clients),
+        compiles=rep.compiles)
 
 
 @dataclass
@@ -219,9 +220,22 @@ class _NetSim:
         else:
             t_c = max(start, overlap_from + down_s) + rep.virtual_time
         clock.push(t_c, "chunk_done", done_data)
+        tele = self.srv.telemetry
+        if tele is not None and rep.n_tasks:
+            # one busy span covers the executor's whole occupancy; the
+            # non-compute share (download + in-span wait) rides as down_s
+            tele.tracer.span(
+                f"exec:{rep.executor}", "chunk", self.t0 + start,
+                self.t0 + t_c, cat="busy",
+                args={"round": version, "n_tasks": rep.n_tasks,
+                      "down_s": max(t_c - rep.virtual_time - start, 0.0)})
+            if rep.compiles:
+                tele.registry.counter(
+                    f"host/exec{rep.executor}/compiles").inc(rep.compiles)
         if rep.n_tasks:
             wirep, nb = self.ship(rep.executor, rep.partial)
             rep.wire_bytes = nb
+            b_up0 = self.bytes_up
             up_s = self.up(rep.completed_clients, nb)
             if fi is None:
                 t_arr = t_c + up_s
@@ -235,16 +249,31 @@ class _NetSim:
                         rep.completed_clients, self.t0 + t_c, t_abs):
                     t_abs = None
                 if t_abs is None:
+                    if tele is not None:
+                        tele.tracer.span(
+                            f"exec:{rep.executor}:up", "upload",
+                            self.t0 + t_c, self.t0 + t_c + up_s, cat="comm",
+                            args={"round": version, "wire_bytes": nb,
+                                  "billed_bytes": float(self.bytes_up
+                                                        - b_up0),
+                                  "lost": True})
                     clock.push(t_c, "upload_lost",
                                (rep.executor,
                                 tuple(rep.completed_clients)))
                     return t_c
                 t_arr = t_abs - self.t0
+            if tele is not None:
+                # billed_bytes includes timeout re-sends (retries re-bill)
+                tele.tracer.span(
+                    f"exec:{rep.executor}:up", "upload",
+                    self.t0 + t_c, self.t0 + t_arr, cat="comm",
+                    args={"round": version, "wire_bytes": nb,
+                          "billed_bytes": float(self.bytes_up - b_up0)})
             clock.push(t_arr, "chunk_arrived", CommEvent(
                 executor=rep.executor, partial=wirep, record=record,
                 n_tasks=rep.n_tasks,
                 completed_clients=tuple(rep.completed_clients),
-                wire_bytes=nb, version=version))
+                wire_bytes=nb, version=version, t_sent=t_c))
         return t_c
 
     # -- availability ------------------------------------------------------
@@ -372,7 +401,8 @@ class RoundEngine:
 
     def _gang_wave(self, srv, rnd: int, states: Dict[int, _ExecState],
                    clock: VirtualClock, payload: Dict, chunk: int,
-                   candidates: List[int], mk_done) -> Set[int]:
+                   candidates: List[int], mk_done,
+                   t_base: float = 0.0) -> Set[int]:
         """SPMD gang dispatch of one aligned DES chunk wave (DESIGN.md §12,
         ``control.gang_waves``): when every idle candidate owns a head chunk
         and the wave gangs (one executor per device, homogeneous block
@@ -412,6 +442,15 @@ class RoundEngine:
                     sm.prefetch(prefetch_ids(es.queue, chunk))
             es.busy_until = start + rep.virtual_time
             clock.push(es.busy_until, "chunk_done", mk_done(k, rep))
+            if srv.telemetry is not None and rep.n_tasks:
+                srv.telemetry.tracer.span(
+                    f"exec:{k}", "chunk", t_base + start,
+                    t_base + es.busy_until, cat="busy",
+                    args={"round": rnd, "n_tasks": rep.n_tasks,
+                          "down_s": 0.0, "ganged": True})
+                if rep.compiles:
+                    srv.telemetry.registry.counter(
+                        f"host/exec{k}/compiles").inc(rep.compiles)
             ganged.add(k)
         return ganged
 
@@ -449,6 +488,9 @@ class RoundEngine:
         for k in fi.restarts_due(t):
             if srv._revive_executor(k):
                 counters.restarts += 1
+                if srv.telemetry is not None:
+                    srv.telemetry.tracer.instant(f"exec:{k}", "restart", t,
+                                                 cat="fault")
         if not srv.executors:
             raise RuntimeError("all executors failed")
 
@@ -585,9 +627,23 @@ class BSPEngine(RoundEngine):
         # next cohort's availability would be filtered at its start)
         fi = srv.faults
         ctrl = self._ctrl(srv)
+        tele = srv.telemetry
+        base = srv.virtual_now        # the barrier's absolute start
         kept = reports
         if netsim is None:
             makespan = max((r.virtual_time for r in reports), default=0.0)
+            if tele is not None:
+                for r in reports:
+                    if r.n_tasks:
+                        tele.tracer.span(
+                            f"exec:{r.executor}", "chunk", base,
+                            base + r.virtual_time, cat="busy",
+                            args={"round": rnd, "n_tasks": r.n_tasks,
+                                  "down_s": 0.0})
+                    if r.compiles:
+                        tele.registry.counter(
+                            f"host/exec{r.executor}/compiles").inc(
+                                r.compiles)
         elif fi is None:
             if ctrl is not None and ctrl.overlap_comm:
                 # comm/compute overlap (DESIGN.md §12): the payload exists
@@ -595,16 +651,38 @@ class BSPEngine(RoundEngine):
                 # concurrently with the lane's earlier COMPUTE — task j
                 # starts at max(t_{j-1}, down_j) instead of after a serial
                 # queue-bottleneck download
-                makespan = self._overlap_span(netsim, reports)
+                makespan = self._overlap_span(netsim, reports, tele=tele,
+                                              base=base, rnd=rnd)
             else:
                 # the barrier waits on comm events: each executor's span is
                 # broadcast-download + compute + partial-upload (the upload
                 # at the achieved wire size measured when the partial
-                # shipped)
-                makespan = max(
-                    (netsim.down(r.completed_clients) + r.virtual_time
-                     + netsim.up(r.completed_clients, r.wire_bytes)
-                     for r in reports), default=0.0)
+                # shipped).  The explicit loop is float-op-identical to the
+                # max-over-genexpr it replaces (same down -> up accounting
+                # order per report, same (d + vt) + u grouping; max is
+                # exact selection) — telemetry ON stays bit-exact.
+                makespan = 0.0
+                for r in reports:
+                    d = netsim.down(r.completed_clients)
+                    u = netsim.up(r.completed_clients, r.wire_bytes)
+                    end = d + r.virtual_time + u
+                    if tele is not None and r.n_tasks:
+                        tele.tracer.span(
+                            f"exec:{r.executor}", "chunk", base,
+                            base + (d + r.virtual_time), cat="busy",
+                            args={"round": rnd, "n_tasks": r.n_tasks,
+                                  "down_s": d})
+                        tele.tracer.span(
+                            f"exec:{r.executor}:up", "upload",
+                            base + (d + r.virtual_time), base + end,
+                            cat="comm",
+                            args={"round": rnd, "wire_bytes": r.wire_bytes,
+                                  "billed_bytes": float(r.wire_bytes)})
+                    if tele is not None and r.compiles:
+                        tele.registry.counter(
+                            f"host/exec{r.executor}/compiles").inc(
+                                r.compiles)
+                    makespan = max(makespan, end)
         else:
             # fault-priced upload leg: blackout pauses + chunk timeout with
             # backed-off re-sends, then mid-upload dropout.  A payload that
@@ -615,7 +693,18 @@ class BSPEngine(RoundEngine):
             for i, r in enumerate(reports):
                 t_c = (netsim.t0 + netsim.down(r.completed_clients)
                        + r.virtual_time)
+                b_up0 = netsim.bytes_up
                 up_s = netsim.up(r.completed_clients, r.wire_bytes)
+                if tele is not None and r.n_tasks:
+                    tele.tracer.span(
+                        f"exec:{r.executor}", "chunk", base, t_c,
+                        cat="busy",
+                        args={"round": rnd, "n_tasks": r.n_tasks,
+                              "down_s": max(t_c - base - r.virtual_time,
+                                            0.0)})
+                if tele is not None and r.compiles:
+                    tele.registry.counter(
+                        f"host/exec{r.executor}/compiles").inc(r.compiles)
                 if not r.n_tasks:
                     spans.append(t_c + up_s - netsim.t0)
                     continue
@@ -629,8 +718,23 @@ class BSPEngine(RoundEngine):
                     lost.add(i)
                     counters.dropped_clients += len(r.completed_clients)
                     spans.append(t_c - netsim.t0)
+                    if tele is not None:
+                        tele.tracer.span(
+                            f"exec:{r.executor}:up", "upload", t_c,
+                            t_c + up_s, cat="comm",
+                            args={"round": rnd, "wire_bytes": r.wire_bytes,
+                                  "billed_bytes": float(netsim.bytes_up
+                                                        - b_up0),
+                                  "lost": True})
                 else:
                     spans.append(t_abs - netsim.t0)
+                    if tele is not None:
+                        tele.tracer.span(
+                            f"exec:{r.executor}:up", "upload", t_c, t_abs,
+                            cat="comm",
+                            args={"round": rnd, "wire_bytes": r.wire_bytes,
+                                  "billed_bytes": float(netsim.bytes_up
+                                                        - b_up0)})
             makespan = max(spans, default=0.0)
             if lost:
                 kept = [r for i, r in enumerate(reports) if i not in lost]
@@ -651,6 +755,10 @@ class BSPEngine(RoundEngine):
         partials = [r.partial for r in kept]      # already the wire copies
         ops = srv.algorithm.ops()
         if partials:   # every report lost in transit -> no update this round
+            if tele is not None:
+                tele.tracer.instant(
+                    "server", "global_fold", base + makespan, cat="server",
+                    args={"round": rnd, "n_partials": len(partials)})
             agg = srv.global_fold(partials)
             agg["_n_selected"] = sum(r.n_tasks for r in kept)
             srv.params, srv.server_state = srv.algorithm.server_update(
@@ -702,7 +810,7 @@ class BSPEngine(RoundEngine):
             comm_bytes=stats.bytes_sent, comm_trips=stats.trips,
             n_clients=len(tasks), n_executors=len(srv.executors),
             estimation_error=err, failures=n_failed, extra=extra)
-        srv.history.append(metrics)
+        srv._commit_metrics(metrics, base)
         srv.round += 1
         if srv.checkpoint_manager is not None:
             srv.checkpoint_manager.maybe_save(srv)
@@ -710,8 +818,8 @@ class BSPEngine(RoundEngine):
 
     # ------------------------------------------------------------------
     @staticmethod
-    def _overlap_span(netsim: _NetSim, reports: List[ExecutorReport]
-                      ) -> float:
+    def _overlap_span(netsim: _NetSim, reports: List[ExecutorReport],
+                      tele=None, base: float = 0.0, rnd: int = 0) -> float:
         """Barrier span with per-client downloads overlapping the lane's
         earlier compute (DESIGN.md §12): task j starts at
         ``max(t_{j-1}, down_j)`` — the fold over the report's per-task
@@ -731,8 +839,22 @@ class BSPEngine(RoundEngine):
                     t = max(t, d) + rec.time
             else:
                 t = d_acc + r.virtual_time
-            span = max(span, t + netsim.up(r.completed_clients,
-                                           r.wire_bytes))
+            u = netsim.up(r.completed_clients, r.wire_bytes)
+            if tele is not None and r.n_tasks:
+                tele.tracer.span(
+                    f"exec:{r.executor}", "chunk", base, base + t,
+                    cat="busy",
+                    args={"round": rnd, "n_tasks": r.n_tasks,
+                          "down_s": max(t - r.virtual_time, 0.0)})
+                tele.tracer.span(
+                    f"exec:{r.executor}:up", "upload", base + t,
+                    base + (t + u), cat="comm",
+                    args={"round": rnd, "wire_bytes": r.wire_bytes,
+                          "billed_bytes": float(r.wire_bytes)})
+            if tele is not None and r.compiles:
+                tele.registry.counter(
+                    f"host/exec{r.executor}/compiles").inc(r.compiles)
+            span = max(span, t + u)
         return span
 
     def _plan_drops(self, srv, schedule: Schedule, netsim: _NetSim
@@ -826,6 +948,10 @@ class BSPEngine(RoundEngine):
                 reports.append(ev.data)
             else:
                 failed.append(ev.data)
+                if srv.telemetry is not None:
+                    srv.telemetry.tracer.instant(
+                        f"exec:{ev.data}", "executor_failed",
+                        srv.virtual_now, cat="fault")
 
         # ---- fault plan: slowdown windows + crashes inside the span ------
         fi = srv.faults
@@ -1067,7 +1193,8 @@ class SemiSyncEngine(RoundEngine):
             # first-wave gang: at round start every first chunk is exempt
             # from the deadline check, matching the serial dispatch exactly
             ganged = self._gang_wave(srv, rnd, states, clock, payload,
-                                     chunk, live, lambda k, rep: (k, rep))
+                                     chunk, live, lambda k, rep: (k, rep),
+                                     t_base=abs0)
         for k in live:
             if k not in ganged:
                 self._dispatch_next(srv, rnd, k, states, clock, payload,
@@ -1094,6 +1221,12 @@ class SemiSyncEngine(RoundEngine):
                         counters.dropped_clients += len(give_up)
                         self._carry.extend(_tasks_of(srv, retryc))
                     else:
+                        if srv.telemetry is not None:
+                            srv.telemetry.tracer.instant(
+                                "server", "fold", abs0 + ev.time,
+                                cat="server",
+                                args={"round": rnd, "executor": k,
+                                      "n_tasks": rep.n_tasks})
                         partials.append(self._wire(srv, k, rep.partial))
                         rec = self._chunk_record(srv, rnd, rep)
                         if rec is not None:
@@ -1117,6 +1250,14 @@ class SemiSyncEngine(RoundEngine):
                     counters.dropped_clients += len(give_up)
                     self._carry.extend(_tasks_of(srv, retryc))
                 else:
+                    if srv.telemetry is not None:
+                        srv.telemetry.tracer.instant(
+                            "server", "fold", abs0 + ev.time, cat="server",
+                            args={"round": rnd, "executor": ce.executor,
+                                  "n_tasks": ce.n_tasks})
+                        srv.telemetry.registry.histogram(
+                            "hist/upload_delay").observe(
+                                max(ev.time - ce.t_sent, 0.0))
                     partials.append(ce.partial)
                     if ce.record is not None:
                         records.append(ce.record)
@@ -1143,6 +1284,10 @@ class SemiSyncEngine(RoundEngine):
             else:  # executor_failed
                 dead, remaining = ev.data
                 n_failed += 1
+                if srv.telemetry is not None:
+                    srv.telemetry.tracer.instant(
+                        f"exec:{dead}", "executor_failed", abs0 + ev.time,
+                        cat="fault")
                 survivors = self._fail_over(srv, states, dead, remaining)
                 for j in survivors:
                     if states[j].stopped:
@@ -1161,6 +1306,11 @@ class SemiSyncEngine(RoundEngine):
                 # (or landing later) re-enters through the carry pool
                 committed, quorum_t = True, ev.time
                 counters.quorum_commits += 1
+                if srv.telemetry is not None:
+                    srv.telemetry.tracer.instant(
+                        "server", "quorum_commit", abs0 + ev.time,
+                        cat="server",
+                        args={"round": rnd, "n_landed": n_landed})
                 for es in states.values():
                     if es.queue:
                         self._carry.extend(es.queue)
@@ -1208,9 +1358,12 @@ class SemiSyncEngine(RoundEngine):
                 # rounds (no workload model -> deadline ∞ -> everything
                 # lands) carry no signal and would bias the EWMA toward
                 # tightening, so they are skipped
-                ctrl.deadline.update(n_landed, len(tasks),
-                                     self.deadline_frac,
-                                     1.0 / self.over_select)
+                new_frac = ctrl.deadline.update(n_landed, len(tasks),
+                                                self.deadline_frac,
+                                                1.0 / self.over_select)
+                note = getattr(ctrl, "note", None)
+                if note is not None:
+                    note("deadline_frac", new_frac, abs0 + makespan)
         if netsim is not None:
             extra.update(netsim.extra())
             if makespan <= 0.0 and n_landed == 0:
@@ -1232,7 +1385,7 @@ class SemiSyncEngine(RoundEngine):
             n_clients=len(tasks), n_executors=len(srv.executors),
             estimation_error=err, failures=n_failed,
             extra=extra)
-        srv.history.append(metrics)
+        srv._commit_metrics(metrics, abs0)
         srv.virtual_now += makespan
         srv.round += 1
         if srv.checkpoint_manager is not None:
@@ -1253,7 +1406,8 @@ class SemiSyncEngine(RoundEngine):
                 # lane takes the predicted-straggler's tail chunk instead
                 # of idling out the deadline; the stolen chunk still faces
                 # the per-chunk deadline check below on the thief's clock
-                self._steal_next(k, states, models, chunk, netsim)
+                self._steal_next(srv, k, states, models, chunk, netsim,
+                                 clock, abs0)
             if not es.queue or es.stopped or es.dead:
                 return
             next_chunk = es.queue[:chunk]
@@ -1351,6 +1505,15 @@ class SemiSyncEngine(RoundEngine):
             if netsim is None:
                 es.busy_until = start + rep.virtual_time
                 clock.push(es.busy_until, "chunk_done", (k, rep))
+                if srv.telemetry is not None and rep.n_tasks:
+                    srv.telemetry.tracer.span(
+                        f"exec:{k}", "chunk", abs0 + start,
+                        abs0 + es.busy_until, cat="busy",
+                        args={"round": rnd, "n_tasks": rep.n_tasks,
+                              "down_s": 0.0})
+                    if rep.compiles:
+                        srv.telemetry.registry.counter(
+                            f"host/exec{k}/compiles").inc(rep.compiles)
                 return
             # comm-priced chunk: the executor is busy for download +
             # compute, then free — the upload overlaps its next chunk and
@@ -1367,7 +1530,8 @@ class SemiSyncEngine(RoundEngine):
                               else None))
             return
 
-    def _steal_next(self, k, states, models, chunk, netsim) -> None:
+    def _steal_next(self, srv, k, states, models, chunk, netsim,
+                    clock, abs0) -> None:
         """Move the predicted-straggler's tail chunk onto drained lane
         ``k`` (``ctrl.rebalance``; same victim policy as the async engine's
         steal).  Deterministic: victim choice and the moved slice depend
@@ -1385,6 +1549,10 @@ class SemiSyncEngine(RoundEngine):
         states[k].queue = vq[-take:]
         states[victim].queue = vq[:-take]
         self._round_steals += 1
+        if srv.telemetry is not None:
+            srv.telemetry.tracer.instant(
+                f"exec:{k}", "steal", abs0 + clock.now, cat="sched",
+                args={"victim": victim, "n_tasks": take})
 
 
 # ---------------------------------------------------------------------------
@@ -1614,6 +1782,10 @@ class AsyncEngine(RoundEngine):
                 es.queue, self._states[victim].queue = \
                     vq[-chunk:], vq[:-chunk]
                 self._steals += 1
+                if srv.telemetry is not None:
+                    srv.telemetry.tracer.instant(
+                        f"exec:{k}", "steal", self._clock.now, cat="sched",
+                        args={"victim": victim, "n_tasks": len(es.queue)})
             tasks, es.queue = es.queue[:chunk], es.queue[chunk:]
             start = max(es.t, self._clock.now)
             if fi is not None and fi.crash_due(k, start) is not None:
@@ -1692,6 +1864,15 @@ class AsyncEngine(RoundEngine):
             if netsim is None:
                 es.busy_until = start + rep.virtual_time
                 self._clock.push(es.busy_until, "chunk_done", (k, rep, rnd))
+                if srv.telemetry is not None and rep.n_tasks:
+                    srv.telemetry.tracer.span(
+                        f"exec:{k}", "chunk", start, es.busy_until,
+                        cat="busy",
+                        args={"round": rnd, "n_tasks": rep.n_tasks,
+                              "down_s": 0.0})
+                    if rep.compiles:
+                        srv.telemetry.registry.counter(
+                            f"host/exec{k}/compiles").inc(rep.compiles)
                 return
             # comm-priced chunk: busy for download + compute; the upload
             # overlaps the next chunk and folds when its arrival event pops
@@ -1727,6 +1908,10 @@ class AsyncEngine(RoundEngine):
             for k in fi.restarts_due(self._clock.now):
                 if srv._revive_executor(k):
                     self._counters.restarts += 1
+                    if srv.telemetry is not None:
+                        srv.telemetry.tracer.instant(
+                            f"exec:{k}", "restart", self._clock.now,
+                            cat="fault")
                     if self._states is not None:
                         self._states[k] = _ExecState(t=self._clock.now)
         self._ensure_init(srv, netsim)
@@ -1792,6 +1977,14 @@ class AsyncEngine(RoundEngine):
                     else:
                         wire = self._wire(srv, k, rep.partial)
                         s = srv.round - version
+                        if srv.telemetry is not None:
+                            srv.telemetry.tracer.instant(
+                                "server", "fold", ev.time, cat="server",
+                                args={"round": srv.round, "executor": k,
+                                      "n_tasks": rep.n_tasks,
+                                      "staleness": s})
+                            srv.telemetry.registry.histogram(
+                                "hist/staleness").observe(s)
                         gamma = staleness_weight(s, self._lambda(srv))
                         self._buffer = merge_partials(
                             self._buffer, scale_partial(wire, gamma))
@@ -1824,6 +2017,17 @@ class AsyncEngine(RoundEngine):
                     self._in_system.difference_update(ce.completed_clients)
                 else:
                     s = srv.round - ce.version
+                    if srv.telemetry is not None:
+                        srv.telemetry.tracer.instant(
+                            "server", "fold", ev.time, cat="server",
+                            args={"round": srv.round,
+                                  "executor": ce.executor,
+                                  "n_tasks": ce.n_tasks, "staleness": s})
+                        srv.telemetry.registry.histogram(
+                            "hist/staleness").observe(s)
+                        srv.telemetry.registry.histogram(
+                            "hist/upload_delay").observe(
+                                max(ev.time - ce.t_sent, 0.0))
                     gamma = staleness_weight(s, self._lambda(srv))
                     self._buffer = merge_partials(
                         self._buffer, scale_partial(ce.partial, gamma))
@@ -1862,6 +2066,10 @@ class AsyncEngine(RoundEngine):
             else:  # executor_failed
                 dead, remaining = ev.data
                 self._n_failed += 1
+                if srv.telemetry is not None:
+                    srv.telemetry.tracer.instant(
+                        f"exec:{dead}", "executor_failed", ev.time,
+                        cat="fault")
                 survivors = self._fail_over(srv, self._states, dead,
                                             remaining)
                 for j in survivors:
@@ -1880,6 +2088,7 @@ class AsyncEngine(RoundEngine):
             err = srv.estimator.estimation_error(srv.estimator.last_fit,
                                                  self._records)
         srv.estimator.record_many(self._records)
+        win0 = self._last_update_t    # the window's absolute start
         makespan = self._clock.now - self._last_update_t
         self._last_update_t = self._clock.now
         srv.virtual_now = self._clock.now
@@ -1900,7 +2109,11 @@ class AsyncEngine(RoundEngine):
             if ctrl.async_lambda is not None:
                 # one controller step per commit, from the closed window's
                 # mean observed staleness (applies from the next fold on)
-                ctrl.async_lambda.update(self._stale_sum / n_folds)
+                new_lam = ctrl.async_lambda.update(
+                    self._stale_sum / n_folds)
+                note = getattr(ctrl, "note", None)
+                if note is not None:
+                    note("staleness_lambda", new_lam, self._clock.now)
         if netsim is not None:
             extra.update(netsim.extra())
             # tail dispatches below happen after this window's metrics were
@@ -1922,7 +2135,15 @@ class AsyncEngine(RoundEngine):
             n_clients=self._n_folded, n_executors=len(srv.executors),
             estimation_error=err, failures=self._n_failed,
             extra=extra)
-        srv.history.append(metrics)
+        if srv.telemetry is not None:
+            srv.telemetry.tracer.instant(
+                "server", "commit", self._clock.now, cat="server",
+                args={"round": rnd, "n_folded": self._n_folded,
+                      "mean_staleness": self._stale_sum / n_folds})
+            for k in sorted(self._states):
+                srv.telemetry.registry.histogram(
+                    "hist/queue_depth").observe(len(self._states[k].queue))
+        srv._commit_metrics(metrics, win0)
         srv.round += 1
         self._reset_window()
 
@@ -1956,6 +2177,10 @@ class AsyncEngine(RoundEngine):
                 for k in live_r:
                     self._states[k].queue = assignment[k]
                 self._rebalance_moved += moved
+                if moved and srv.telemetry is not None:
+                    srv.telemetry.tracer.instant(
+                        "server", "rebalance", self._clock.now,
+                        cat="sched", args={"moved": moved})
         ganged: Set[int] = set()
         if ctrl is not None and ctrl.gang_waves and netsim is None:
             chunk = self._chunk_size(srv, self.chunk_size)

@@ -124,6 +124,10 @@ class ExecutorReport:
     # achieved wire size of the shipped partial (set by the engines when a
     # NetworkModel prices uploads; 0 = not measured)
     wire_bytes: int = 0
+    # jit compiles observed while this report ran (jax.monitoring listener
+    # in client_step) — host-side cost attribution, process-local: warm jit
+    # caches legitimately zero it, so it never enters trace determinism
+    compiles: int = 0
 
 
 class SequentialExecutor:
@@ -330,6 +334,7 @@ class SequentialExecutor:
         records: List[RunRecord] = []
         completed: List[int] = []
         t_start = self.timer()
+        c0 = client_step.compile_events()
         eta = self.speed_model(self.id, rnd)
         # fail_at is task-index-granular: a round with a pending injection
         # runs the eager per-task loop so the index semantics stay exact
@@ -347,7 +352,8 @@ class SequentialExecutor:
         return ExecutorReport(
             executor=self.id, partial=agg.partial(), records=records,
             virtual_time=vtime, wall_time=self.timer() - t_start,
-            n_tasks=len(completed), completed_clients=completed)
+            n_tasks=len(completed), completed_clients=completed,
+            compiles=client_step.compile_events() - c0)
 
     def _run_chunked(self, rnd, tasks, payload, data_by_client, skip_clients,
                      chunk_size, on_partial, task_offset) -> ExecutorReport:
@@ -357,6 +363,7 @@ class SequentialExecutor:
         records: List[RunRecord] = []
         completed: List[int] = []
         vtime = wall = 0.0
+        compiles = 0
         offset = task_offset
         for chunk in split_chunks(tasks, chunk_size):
             rep = self.run_queue(rnd, chunk, payload, data_by_client,
@@ -369,11 +376,13 @@ class SequentialExecutor:
             completed.extend(rep.completed_clients)
             vtime += rep.virtual_time
             wall += rep.wall_time
+            compiles += rep.compiles
         return ExecutorReport(
             executor=self.id, partial=merged if merged is not None else
             LocalAggregator(self.algorithm.ops()).partial(),
             records=records, virtual_time=vtime, wall_time=wall,
-            n_tasks=len(completed), completed_clients=completed)
+            n_tasks=len(completed), completed_clients=completed,
+            compiles=compiles)
 
     # ------------------------------------------------------------------
     def _run_eager(self, rnd, tasks, payload, data_by_client, skip_clients,
@@ -646,6 +655,7 @@ def run_queues_ganged(executors: Dict[int, "SequentialExecutor"], rnd: int,
 
     # ---- run ------------------------------------------------------------
     engine = client_step.engine_for(algo)       # hosts the sharded cache
+    gang_c0 = client_step.compile_events()      # gang-level compile delta
     etas = [ex.speed_model(ex.id, rnd) for ex in exs]
     aggs, placed = [], []
     for ex in exs:
@@ -739,7 +749,11 @@ def run_queues_ganged(executors: Dict[int, "SequentialExecutor"], rnd: int,
         reports[k] = ExecutorReport(
             executor=k, partial=aggs[j].partial(), records=records[j],
             virtual_time=vtimes[j], wall_time=walls[j],
-            n_tasks=len(completed[j]), completed_clients=completed[j])
+            n_tasks=len(completed[j]), completed_clients=completed[j],
+            # sharded waves compile once for the whole gang: the delta is
+            # attributed to the first lane (host-side accounting only)
+            compiles=(client_step.compile_events() - gang_c0
+                      if j == 0 else 0))
     return reports
 
 

@@ -70,6 +70,9 @@ class CommEvent:
     completed_clients: Tuple[int, ...]
     wire_bytes: int
     version: int = 0
+    # local virtual time the upload left the executor (telemetry: the
+    # arrival-minus-sent delta feeds the upload-delay histogram)
+    t_sent: float = 0.0
 
 
 class NetworkModel:

@@ -66,7 +66,12 @@ class RoundMetrics:
     n_executors: int
     estimation_error: float = float("nan")
     failures: int = 0
-    extra: Dict[str, float] = field(default_factory=dict)
+    # deliberately Any-valued: alongside scalar counters/gauges this carries
+    # the nested state-manager stats dict and per-executor utilization dict.
+    # The full key schema lives in telemetry.EXTRA_SCHEMA / DESIGN.md §13;
+    # a server with telemetry attached mirrors every numeric key into the
+    # typed MetricsRegistry at round commit.
+    extra: Dict[str, Any] = field(default_factory=dict)
 
 
 class ParrotServer:
@@ -93,6 +98,7 @@ class ParrotServer:
                  faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
                  control: Optional[Any] = None,
+                 telemetry: Optional[Any] = None,
                  fold_fan_in: int = 16,
                  seed: int = 0):
         from repro.core.engine import make_engine
@@ -165,6 +171,22 @@ class ParrotServer:
         # keeps every engine on its pre-control code path bit-exactly, and
         # ControlPlane.observer() is pinned behaviour-identical to None.
         self.control = control
+        # virtual-time telemetry (DESIGN.md §13): span tracer + metrics
+        # registry + utilization accounting.  None (the default) is
+        # consulted nowhere — every engine stays bit-exact (params AND
+        # makespans); ``telemetry=True`` builds a default bundle.  The same
+        # object is shared with the fault injector and control plane so
+        # their events land on the common lanes.
+        if telemetry is True:
+            from repro.core.telemetry import Telemetry
+            telemetry = Telemetry()
+        self.telemetry = telemetry
+        if telemetry is not None:
+            if self.faults is not None:
+                self.faults.telemetry = telemetry
+                telemetry.trace_plan(self.faults.plan)
+            if control is not None and hasattr(control, "telemetry"):
+                control.telemetry = telemetry
         # crashed executors park here so a scheduled restart (or a
         # checkpoint restore of a pre-crash topology) can revive them
         self._retired: Dict[int, SequentialExecutor] = {}
@@ -429,6 +451,18 @@ class ParrotServer:
         return self.compressor.decompress_partial(partial)
 
     # ------------------------------------------------------------------
+    def _commit_metrics(self, metrics: RoundMetrics, t0: float) -> None:
+        """Round-boundary commit: every engine routes its finished
+        RoundMetrics through here with the round window's virtual start
+        time.  With telemetry attached, the round's extra is ingested into
+        the metrics registry and per-executor busy/comm/idle fractions over
+        ``[t0, t0 + makespan]`` land in ``metrics.extra["utilization"]``
+        BEFORE the metrics join history (so checkpointed history carries
+        them); without it this is exactly ``history.append``."""
+        if self.telemetry is not None:
+            self.telemetry.on_round(self, metrics, t0)
+        self.history.append(metrics)
+
     def run_round(self) -> RoundMetrics:
         """One server round under the configured engine: a full BSP barrier,
         a deadline-bounded semi-sync round, or one bounded-staleness update
